@@ -1,0 +1,31 @@
+"""Pallas kernel micro-benchmarks (interpret-mode correctness cost is
+not meaningful perf; this reports the jnp-reference path wall time and
+the kernels' structural roofline estimates for the TPU target)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import kernels as K
+from repro.roofline.collect import HBM_BW, PEAK_FLOPS_BF16
+
+
+def main():
+    print("# Gram-matrix hot spot: jnp reference wall time + TPU roofline")
+    rng = np.random.default_rng(0)
+    for n, d in [(800, 102), (1600, 102), (4096, 128)]:
+        a = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        fn = jax.jit(lambda x: K.rbf_gram(x, x, gamma=0.1))
+        t = timeit(fn, a)
+        flops = 2.0 * n * n * d
+        bytes_ = (2 * n * d + n * n) * 4
+        t_tpu = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+        emit(f"gram_{n}x{d}_jnp_cpu", t,
+             f"tpu_roofline_est={t_tpu * 1e6:.1f}us "
+             f"ai={flops / bytes_:.1f}flop/B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark runner — one section per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark:
+  Table III & V -> bench_binary      (binary SMO vs GD training time)
+  Table IV      -> bench_multiclass  (9-class OvO parallel vs sequential)
+  Table VI      -> bench_portability (same program jit vs eager)
+  kernels       -> bench_kernels     (hot-spot roofline estimates)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="drop the largest sample sizes")
+    ap.add_argument("--only", default="",
+                    help="comma list: binary,multiclass,portability,kernels")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+
+    from benchmarks import (bench_binary, bench_kernels, bench_multiclass,
+                            bench_portability)
+    if args.quick:
+        bench_binary.GD_STEPS = 300
+        bench_multiclass.GD_STEPS = 300
+
+    if only is None or "binary" in only:
+        bench_binary.main()
+    if only is None or "multiclass" in only:
+        bench_multiclass.main()
+        if not args.quick:
+            bench_multiclass.scaling()
+    if only is None or "portability" in only:
+        bench_portability.main()
+    if only is None or "kernels" in only:
+        bench_kernels.main()
+
+
+if __name__ == "__main__":
+    main()

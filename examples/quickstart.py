@@ -1,0 +1,46 @@
+"""Quickstart: the paper's core comparison in ~40 lines.
+
+Trains a binary RBF-SVM on Iris two ways — the parallel-SMO solver (the
+paper's CUDA implementation, adapted to TPU/JAX) and the
+gradient-descent dual solver (the paper's TensorFlow baseline) — and
+prints accuracy + wall time + the speedup ratio.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.svm import SVC
+from repro.data import load_iris, normalize, train_test_split
+
+
+def main():
+    x, y = load_iris()
+    x = normalize(x)
+    sel = y != 2                       # binary: setosa vs versicolor
+    xtr, ytr, xte, yte = train_test_split(x[sel], y[sel], test_frac=0.25,
+                                          seed=0)
+
+    results = {}
+    for solver, label in (("smo", "parallel SMO ('MPI-CUDA' path)"),
+                          ("gd", "gradient descent ('TF' baseline)")):
+        clf = SVC(kernel="rbf", C=1.0, solver=solver, gd_steps=2000)
+        clf.fit(xtr, ytr)          # warm-up: trace + compile
+        t0 = time.perf_counter()
+        clf.fit(xtr, ytr)          # measured: the training itself
+        dt = time.perf_counter() - t0
+        acc = clf.score(xte, yte)
+        results[solver] = dt
+        print(f"{label:38s} acc={acc:.3f} "
+              f"iters={clf.n_iter_:5d} time={dt:.3f}s")
+
+    print(f"\nspeedup (SMO over GD): {results['gd'] / results['smo']:.1f}x"
+          f"  <- the paper's Table V axis")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""SVM head on frozen transformer embeddings — the pod-scale deployment
+scenario from DESIGN.md §2: any of the 10 assigned backbones produces
+pooled hidden-state features; the paper's distributed OvO-SMO trains a
+multiclass probe on top.
+
+    PYTHONPATH=src python examples/svm_on_embeddings.py [arch]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core.svm import SVC
+from repro.data import normalize
+from repro.models.model import Model
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "zamba2_1p2b"
+
+
+def pooled_features(model, params, toks):
+    """Mean-pooled logit features (stand-in for hidden-state pooling)."""
+    logits, _ = jax.jit(model.forward)(params,
+                                       {"tokens": jnp.asarray(toks)})
+    return np.asarray(logits, np.float32).mean(axis=1)[:, :256]
+
+
+def main():
+    cfg = reduced(get_config(ARCH))
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    print(f"backbone: {cfg.name} ({cfg.arch_type})")
+
+    rng = np.random.default_rng(0)
+    n_classes, n_per = 4, 24
+    feats, labels = [], []
+    for c in range(n_classes):
+        lo = c * (cfg.vocab_size // n_classes)
+        toks = rng.integers(lo, lo + cfg.vocab_size // n_classes,
+                            (n_per, 32)).astype(np.int32)
+        feats.append(pooled_features(model, params, toks))
+        labels.append(np.full(n_per, c))
+    x = normalize(np.concatenate(feats))
+    y = np.concatenate(labels)
+    perm = rng.permutation(len(y))          # stratify-ish: shuffle first
+    x, y = x[perm], y[perm]
+
+    n_test = n_classes * 6
+    clf = SVC(solver="smo", C=10.0).fit(x[n_test:], y[n_test:])
+    print(f"OvO tasks: {n_classes * (n_classes - 1) // 2}, "
+          f"converged={clf.converged_}")
+    print(f"probe train acc: {clf.score(x[n_test:], y[n_test:]):.3f}")
+    print(f"probe test  acc: {clf.score(x[:n_test], y[:n_test]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

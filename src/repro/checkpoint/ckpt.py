@@ -1,0 +1,55 @@
+"""Numpy-npz pytree checkpointing (offline container: no orbax).
+
+Saves any pytree of arrays with its treedef; restore optionally
+device_puts leaves with provided shardings (sharding-aware restore for
+the launcher).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import numpy as np
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    keys, vals, _ = _flatten_with_paths(tree)
+    arrays = {f"arr_{i}": np.asarray(v) for i, v in enumerate(vals)}
+    meta = {"keys": keys, "step": step}
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def restore(path: str, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    keys, vals, treedef = _flatten_with_paths(like)
+    n = len(vals)
+    loaded = [data[f"arr_{i}"] for i in range(n)]
+    for i, (ref, new) in enumerate(zip(vals, loaded)):
+        if tuple(ref.shape) != tuple(new.shape):
+            raise ValueError(f"shape mismatch for {keys[i]}: "
+                             f"{ref.shape} vs {new.shape}")
+    if shardings is not None:
+        flat_sh = jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        loaded = [jax.device_put(v, s) for v, s in zip(loaded, flat_sh)]
+    return jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+def latest_step(path: str) -> Optional[int]:
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    return meta.get("step")

@@ -1,0 +1,21 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA. [arXiv:2412.08905]
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4_mini_3p8b",
+    arch_type="dense",
+    source="arXiv:2412.08905",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=200064,
+    attention="gqa",
+    rope_theta=10_000.0,
+    act="swiglu",
+)

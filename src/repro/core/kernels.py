@@ -1,0 +1,85 @@
+"""Kernel (Gram) functions for SVM — pure-jnp reference path.
+
+These are the mathematical kernels K(x, z) used by both solvers. The
+performance-critical tiled TPU versions live in ``repro.kernels`` (Pallas);
+every Pallas kernel's oracle delegates to the functions here.
+
+All functions take matrices ``A (n, d)`` and ``B (m, d)`` and return the
+Gram block ``K (n, m)`` in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelParams:
+    """Hyper-parameters of the SVM kernel function.
+
+    gamma:  RBF / poly / sigmoid scale. ``gamma <= 0`` means "scale":
+            1 / (d * Var[X]) resolved at fit time.
+    degree: polynomial degree.
+    coef0:  poly / sigmoid offset.
+    """
+
+    name: str = "rbf"  # linear | poly | rbf | sigmoid
+    gamma: float = 1.0
+    degree: int = 3
+    coef0: float = 0.0
+
+
+def linear_gram(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+
+
+def poly_gram(a: jax.Array, b: jax.Array, *, gamma: float, degree: int,
+              coef0: float) -> jax.Array:
+    return (gamma * linear_gram(a, b) + coef0) ** degree
+
+
+def sigmoid_gram(a: jax.Array, b: jax.Array, *, gamma: float,
+                 coef0: float) -> jax.Array:
+    return jnp.tanh(gamma * linear_gram(a, b) + coef0)
+
+
+def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise squared Euclidean distances, numerically clamped at 0."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)          # (n, 1)
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T        # (1, m)
+    d2 = a2 + b2 - 2.0 * jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    return jnp.maximum(d2, 0.0)
+
+
+def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float) -> jax.Array:
+    return jnp.exp(-gamma * sqdist(a, b))
+
+
+def make_gram_fn(params: KernelParams) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Resolve a KernelParams into a jit-friendly ``(A, B) -> K`` closure."""
+    name = params.name
+    if name == "linear":
+        return linear_gram
+    if name == "poly":
+        return partial(poly_gram, gamma=params.gamma, degree=params.degree,
+                       coef0=params.coef0)
+    if name == "sigmoid":
+        return partial(sigmoid_gram, gamma=params.gamma, coef0=params.coef0)
+    if name == "rbf":
+        return partial(rbf_gram, gamma=params.gamma)
+    raise ValueError(f"unknown kernel {name!r}")
+
+
+def resolve_gamma(params: KernelParams, x: jax.Array) -> KernelParams:
+    """Resolve gamma<=0 to the sklearn-style 'scale' heuristic."""
+    if params.gamma > 0:
+        return params
+    var = float(jnp.var(x))
+    gamma = 1.0 / (x.shape[-1] * max(var, 1e-12))
+    return dataclasses.replace(params, gamma=gamma)

@@ -1,0 +1,91 @@
+"""One-vs-one multiclass decomposition (paper Sec. III, Fig. 4).
+
+For m classes the problem splits into C = m(m-1)/2 *independent* binary
+subproblems — the unit of distribution in the paper's MPI layer. Task
+construction happens on the host (numpy), producing fixed-shape padded
+arrays so one SPMD program (vmap'd / shard_map'd ``binary_smo``) can
+drive every task:
+
+  x_tasks   (C, n_task, d)   samples of the two classes, zero-padded
+  y_tasks   (C, n_task)      +1 / -1, 0 on padding
+  mask      (C, n_task)      validity
+  pairs     (C, 2)           (class_a -> +1, class_b -> -1)
+
+Prediction is majority voting over the C binary decisions, ties broken
+toward the lower class index (LIBSVM convention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+class OvOTasks(NamedTuple):
+    x: np.ndarray      # (C, n_task, d)
+    y: np.ndarray      # (C, n_task)
+    mask: np.ndarray   # (C, n_task)
+    pairs: np.ndarray  # (C, 2) original class labels
+    classes: np.ndarray  # (m,) sorted unique labels
+
+
+def n_binary_tasks(m: int) -> int:
+    return m * (m - 1) // 2
+
+
+def build_tasks(x: np.ndarray, y: np.ndarray,
+                pad_tasks_to: int | None = None) -> OvOTasks:
+    """Host-side task construction. ``pad_tasks_to`` pads the TASK axis
+    (with empty dummy tasks) so it divides the worker count evenly —
+    the static partition ``N = C / P`` of the paper's Fig. 4."""
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y)
+    classes = np.unique(y)
+    m = len(classes)
+    if m < 2:
+        raise ValueError("need at least 2 classes")
+    pairs = [(a, b) for ai, a in enumerate(classes) for b in classes[ai + 1:]]
+    n_task = 0
+    members = {c: np.where(y == c)[0] for c in classes}
+    for a, b in pairs:
+        n_task = max(n_task, len(members[a]) + len(members[b]))
+
+    c_total = len(pairs) if pad_tasks_to is None else max(
+        len(pairs), -(-len(pairs) // pad_tasks_to) * pad_tasks_to)
+
+    d = x.shape[1]
+    xt = np.zeros((c_total, n_task, d), np.float32)
+    yt = np.zeros((c_total, n_task), np.float32)
+    mk = np.zeros((c_total, n_task), bool)
+    pr = np.zeros((c_total, 2), y.dtype if y.dtype.kind in "if" else np.int64)
+    for t, (a, b) in enumerate(pairs):
+        ia, ib = members[a], members[b]
+        k = len(ia) + len(ib)
+        xt[t, :k] = np.concatenate([x[ia], x[ib]], axis=0)
+        yt[t, :len(ia)] = 1.0
+        yt[t, len(ia):k] = -1.0
+        mk[t, :k] = True
+        pr[t] = (a, b)
+    return OvOTasks(x=xt, y=yt, mask=mk, pairs=pr, classes=classes)
+
+
+def vote(decisions: jax.Array, pairs: np.ndarray, classes: np.ndarray,
+         n_real_tasks: int) -> jax.Array:
+    """Majority vote.  decisions: (C_padded, n_test) binary decision values.
+
+    Returns (n_test,) predicted class indices into ``classes``.
+    """
+    m = len(classes)
+    cls_index = {c: i for i, c in enumerate(classes)}
+    votes = jnp.zeros((decisions.shape[1], m), jnp.float32)
+    for t in range(n_real_tasks):
+        a, b = pairs[t]
+        pos = (decisions[t] > 0)
+        votes = votes.at[:, cls_index[a]].add(pos.astype(jnp.float32))
+        votes = votes.at[:, cls_index[b]].add((~pos).astype(jnp.float32))
+        # tiny margin-magnitude tiebreaker, LIBSVM-style stability
+        votes = votes.at[:, cls_index[a]].add(1e-6 * jnp.tanh(decisions[t]))
+        votes = votes.at[:, cls_index[b]].add(-1e-6 * jnp.tanh(decisions[t]))
+    return jnp.argmax(votes, axis=1)

@@ -1,0 +1,275 @@
+"""Parallel binary SMO — the paper's CUDA solver, adapted to TPU/JAX.
+
+The paper (Fig. 3) launches one CUDA thread per training sample so that
+every data-parallel stage of SMO runs on the device, and performs
+convergence checks "on the host for every set of iterations on the
+device". The TPU-native adaptation:
+
+* the per-sample axis is vectorized (VPU lanes / Pallas VMEM tiles)
+  instead of SIMT threads;
+* working-set selection (the block-reduce argmax in CUDA) is a masked
+  max/argmax reduction — optionally the fused Pallas ``kkt_select``
+  kernel;
+* the host-side convergence check becomes the predicate of a
+  ``lax.while_loop`` whose body runs ``check_every`` SMO iterations
+  (``lax.fori_loop``), mirroring the paper's device-iterations-between-
+  checks structure without host round-trips (free scalar check on-chip).
+
+The algorithm is first-order working-set selection SMO (Keerthi
+modification 2, the same family as the GPU SVM implementations the paper
+builds on):
+
+  f_i = sum_j alpha_j y_j K_ij - y_i                (optimality gradient)
+  I_up  = {i: (y_i=+1, a_i<C) or (y_i=-1, a_i>0)}
+  I_low = {i: (y_i=+1, a_i>0) or (y_i=-1, a_i<C)}
+  b_up = min_{I_up} f_i ;  b_low = max_{I_low} f_i
+  converged  <=>  b_low <= b_up + 2 tol
+
+Each iteration updates the maximal-violating pair (i_low, i_up) and then
+updates the WHOLE f-cache with two kernel rows — the fully data-parallel
+"one thread per sample" stage.
+
+Everything is mask-aware so that one ``vmap``/``shard_map`` program can
+drive many padded one-vs-one tasks (the MPI layer in ``core.dist``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels as K
+
+_EPS = 1e-8
+_BIG = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SMOConfig:
+    """Solver hyper-parameters (box constraint + stopping rule)."""
+
+    C: float = 1.0
+    tol: float = 1e-3
+    max_iter: int = 100_000       # hard cap on SMO pair updates
+    check_every: int = 32         # device iterations per convergence check
+    precompute_gram: bool = True  # n<=~8k: keep the full Gram in memory
+    use_pallas: bool = False      # route Gram/selection through Pallas ops
+    selection: str = "first"      # first (paper) | second (WSS2, beyond-
+                                  # paper: maximal-gain partner choice)
+
+
+class SMOResult(NamedTuple):
+    alpha: jax.Array      # (n,) Lagrange multipliers
+    b: jax.Array          # () bias, decision = sum a_i y_i K(x_i, .) + b
+    n_iter: jax.Array     # () pair updates actually applied
+    converged: jax.Array  # () bool
+    gap: jax.Array        # () final b_low - b_up duality-violation gap
+
+
+class _State(NamedTuple):
+    alpha: jax.Array
+    f: jax.Array
+    n_iter: jax.Array
+    b_up: jax.Array
+    b_low: jax.Array
+
+
+def _selection(f, alpha, y, mask, c):
+    """Working-set selection: (b_up, i_up, b_low, i_low).
+
+    This is the reduction stage — CUDA block-reduce in the paper, a masked
+    min/argmax on the vector unit here (or the Pallas ``kkt_select``
+    kernel when routed through ``repro.kernels.ops``).
+
+    Membership epsilon is RELATIVE to C: f32 residues (alpha ~ 1e-8 left
+    over from a clipped update) must not count as movable, or the solver
+    can cycle on a box-blocked maximal-violating pair forever.
+    """
+    eps = 1e-6 * c
+    pos, neg = y > 0, y <= 0
+    not_upper = alpha < c - eps    # can increase
+    not_lower = alpha > eps        # can decrease
+    up_mask = mask & ((pos & not_upper) | (neg & not_lower))
+    low_mask = mask & ((pos & not_lower) | (neg & not_upper))
+    f_up = jnp.where(up_mask, f, _BIG)
+    f_low = jnp.where(low_mask, f, -_BIG)
+    i_up = jnp.argmin(f_up)
+    i_low = jnp.argmax(f_low)
+    return f_up[i_up], i_up, f_low[i_low], i_low
+
+
+def _smo_iteration(state: _State, *, x, y, mask, gram, row_fn,
+                   cfg: SMOConfig, _kdiag=None):
+    """One working-set pair update + full f-cache refresh.
+
+    selection="first": maximal violating pair (the paper's GPU solver).
+    selection="second" (WSS2, Fan et al. 2005): i = argmin_{I_up} f, then
+    j maximizes the guaranteed objective gain (f_j - f_i)^2 / (2 eta_ij)
+    over I_low — pays one already-needed kernel row, typically converges
+    in ~2x fewer iterations.
+    """
+    alpha, f = state.alpha, state.f
+    c = cfg.C
+    b_up, i_up, b_low, i_low = _selection(f, alpha, y, mask, c)
+    active = b_low > b_up + 2.0 * cfg.tol  # not yet converged
+
+    j = i_up
+    if gram is not None:
+        row_j = gram[j]
+    else:
+        row_j = row_fn(x, x[j])
+    k_jj = row_j[j]
+
+    if cfg.selection == "second":
+        # gain_l = (f_l - b_up)^2 / (2 eta_lj) over valid I_low partners
+        eps = 1e-6 * c
+        pos, neg = y > 0, y <= 0
+        low_mask = mask & ((pos & (alpha > eps)) | (neg & (alpha < c - eps)))
+        diag = jnp.diagonal(gram) if gram is not None else _kdiag
+        eta_all = jnp.maximum(diag + k_jj - 2.0 * row_j, 1e-12)
+        df = f - b_up
+        gain = jnp.where(low_mask & (df > 0.0), df * df / eta_all, -jnp.inf)
+        i = jnp.argmax(gain)
+    else:
+        i = i_low
+
+    y_i, y_j = y[i], y[j]
+    a_i, a_j = alpha[i], alpha[j]
+
+    if gram is not None:
+        row_i = gram[i]
+    else:
+        row_i = row_fn(x, x[i])
+    k_ii = row_i[i]
+    k_ij = row_i[j]
+    # recompute the pair's violation for the update step size
+    b_low_pair = f[i]
+    b_up_pair = f[j]
+    eta = jnp.maximum(k_ii + k_jj - 2.0 * k_ij, 1e-12)
+
+    # unconstrained step on a_j, then clip to the box segment
+    # (pair's own violation: == b_low - b_up under first-order selection)
+    a_j_new = a_j + y_j * (b_low_pair - b_up_pair) / eta
+    same = y_i == y_j
+    lo = jnp.where(same, jnp.maximum(0.0, a_i + a_j - c), jnp.maximum(0.0, a_j - a_i))
+    hi = jnp.where(same, jnp.minimum(c, a_i + a_j), jnp.minimum(c, c + a_j - a_i))
+    a_j_new = jnp.clip(a_j_new, lo, hi)
+    a_i_new = a_i + y_i * y_j * (a_j - a_j_new)
+
+    # snap to exact bounds: f32 residues near 0/C would otherwise keep
+    # dead multipliers inside I_up/I_low and stall working-set selection
+    snap = 1e-6 * c
+    a_j_new = jnp.where(a_j_new < snap, 0.0,
+                        jnp.where(a_j_new > c - snap, c, a_j_new))
+    a_i_new = jnp.where(a_i_new < snap, 0.0,
+                        jnp.where(a_i_new > c - snap, c, a_i_new))
+
+    d_i = jnp.where(active, a_i_new - a_i, 0.0)
+    d_j = jnp.where(active, a_j_new - a_j, 0.0)
+
+    alpha = alpha.at[i].add(d_i)
+    alpha = alpha.at[j].add(d_j)
+    # the "one thread per sample" stage: every sample updates its f entry
+    f = f + d_i * y_i * row_i + d_j * y_j * row_j
+
+    return _State(alpha=alpha,
+                  f=f,
+                  n_iter=state.n_iter + active.astype(jnp.int32),
+                  b_up=b_up,
+                  b_low=b_low)
+
+
+def binary_smo(x: jax.Array,
+               y: jax.Array,
+               mask: Optional[jax.Array] = None,
+               *,
+               cfg: SMOConfig = SMOConfig(),
+               kernel: K.KernelParams = K.KernelParams(),
+               gram: Optional[jax.Array] = None,
+               row_fn: Optional[Callable] = None) -> SMOResult:
+    """Solve one binary soft-margin SVM dual with parallel SMO.
+
+    Args:
+      x: (n, d) float training samples.
+      y: (n,) labels in {+1, -1} (float or int).
+      mask: (n,) bool validity mask — padded entries are never selected and
+        keep alpha = 0 (used by the distributed OvO layer).
+      gram: optional precomputed (n, n) Gram matrix. If None and
+        ``cfg.precompute_gram``, it is computed here; otherwise kernel rows
+        are computed on the fly (O(n d) memory).
+      row_fn: optional ``(X, z) -> K(X, z)`` row function override (e.g.
+        the Pallas tiled row kernel from ``repro.kernels.ops``).
+    """
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones((n,), dtype=bool)
+    mask = mask & (jnp.abs(y) > 0.5)  # padded labels may be 0
+
+    if cfg.use_pallas and kernel.name == "rbf":
+        # route the Gram hot spot through the tiled Pallas kernels
+        from repro.kernels import ops as pallas_ops
+        if row_fn is None:
+            row_fn = pallas_ops.gram_row_fn(gamma=kernel.gamma)
+        if gram is None and cfg.precompute_gram:
+            gram = pallas_ops.rbf_gram(x, x, gamma=kernel.gamma)
+    if row_fn is None:
+        gram_fn = K.make_gram_fn(kernel)
+        row_fn = lambda xs, z: gram_fn(xs, z[None, :])[:, 0]
+    if gram is None and cfg.precompute_gram:
+        gram = K.make_gram_fn(kernel)(x, x)
+
+    f0 = -y  # alpha = 0  =>  f_i = -y_i
+    state0 = _State(alpha=jnp.zeros((n,), jnp.float32), f=f0,
+                    n_iter=jnp.zeros((), jnp.int32),
+                    b_up=jnp.asarray(-1.0, jnp.float32),
+                    b_low=jnp.asarray(1.0, jnp.float32))
+
+    kdiag = None
+    if cfg.selection == "second" and gram is None:
+        # K(x,x) diagonal for the WSS2 eta terms (RBF: exactly 1)
+        if kernel.name == "rbf":
+            kdiag = jnp.ones((n,), jnp.float32)
+        else:
+            gf = K.make_gram_fn(kernel)
+            kdiag = jax.vmap(lambda r: gf(r[None], r[None])[0, 0])(x)
+    iteration = partial(_smo_iteration, x=x, y=y, mask=mask, gram=gram,
+                        row_fn=row_fn, cfg=cfg, _kdiag=kdiag)
+
+    def cond(state: _State):
+        return (state.b_low > state.b_up + 2.0 * cfg.tol) & (
+            state.n_iter < cfg.max_iter)
+
+    def body(state: _State):
+        # paper Fig. 3: run `check_every` device iterations between checks
+        return jax.lax.fori_loop(0, cfg.check_every,
+                                 lambda _, s: iteration(s), state)
+
+    state = jax.lax.while_loop(cond, body, state0)
+    # final selection for the reported gap / bias
+    b_up, _, b_low, _ = _selection(state.f, state.alpha, y, mask, cfg.C)
+    b = -(b_up + b_low) / 2.0
+    return SMOResult(alpha=state.alpha * mask, b=b, n_iter=state.n_iter,
+                     converged=b_low <= b_up + 2.0 * cfg.tol,
+                     gap=b_low - b_up)
+
+
+def decision_function(x_train, y_train, alpha, b, x_test, *,
+                      kernel: K.KernelParams = K.KernelParams(),
+                      gram_fn: Optional[Callable] = None) -> jax.Array:
+    """f(z) = sum_i alpha_i y_i K(x_i, z) + b for each test row z."""
+    if gram_fn is None:
+        gram_fn = K.make_gram_fn(kernel)
+    kmat = gram_fn(x_test.astype(jnp.float32), x_train.astype(jnp.float32))
+    coef = (alpha * y_train.astype(jnp.float32))
+    return kmat @ coef + b
+
+
+def dual_objective(y, alpha, gram) -> jax.Array:
+    """W(alpha) = 1'a - 1/2 a' (yy' * K) a — maximized by the dual SVM."""
+    ay = alpha * y
+    return jnp.sum(alpha) - 0.5 * ay @ (gram @ ay)

@@ -1,0 +1,128 @@
+"""Public SVM API — sklearn-flavoured front end over the parallel solvers.
+
+    clf = SVC(kernel="rbf", C=1.0, solver="smo")      # paper's CUDA path
+    clf = SVC(kernel="rbf", C=1.0, solver="gd")       # paper's TF baseline
+    clf.fit(X, y)                                     # binary OR multiclass
+    clf.predict(Xt); clf.score(Xt, yt)
+
+Multiclass fits use one-vs-one. ``mesh``/``worker_axes`` route the task
+axis through the distributed (shard_map) "MPI" layer; without a mesh the
+tasks are vmapped on the local device (single-GPU configuration of the
+paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import dist, gd, kernels as K, ovo, smo
+
+
+class SVC:
+    def __init__(self, *, kernel: str = "rbf", C: float = 1.0,
+                 gamma: float = -1.0, degree: int = 3, coef0: float = 0.0,
+                 tol: float = 1e-3, max_iter: int = 100_000,
+                 solver: str = "smo", gd_lr: float = 0.01,
+                 gd_steps: int = 300,
+                 mesh: Optional[Mesh] = None,
+                 worker_axes: tuple[str, ...] = ("workers",)):
+        self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
+                                            degree=degree, coef0=coef0)
+        self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter)
+        self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
+        self.solver = solver
+        self.mesh = mesh
+        self.worker_axes = worker_axes
+        self._fitted = False
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "SVC":
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y)
+        self.kernel_params = K.resolve_gamma(self.kernel_params,
+                                             jnp.asarray(x))
+        classes = np.unique(y)
+        self.classes_ = classes
+        if len(classes) == 2:
+            yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
+            if self.solver == "smo":
+                r = jax.jit(
+                    lambda xx, yv: smo.binary_smo(
+                        xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params)
+                )(jnp.asarray(x), jnp.asarray(yy))
+                self.n_iter_ = int(r.n_iter)
+                self.converged_ = bool(r.converged)
+            else:
+                r = jax.jit(
+                    lambda xx, yv: gd.binary_gd(
+                        xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params)
+                )(jnp.asarray(x), jnp.asarray(yy))
+                self.n_iter_ = int(r.n_iter)
+                self.converged_ = True
+            self._binary = True
+            self._x, self._y = x, yy
+            self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
+            self.support_ = np.where(self.alpha_ > 1e-8)[0]
+        else:
+            n_workers = 1
+            if self.mesh is not None:
+                n_workers = int(np.prod([self.mesh.shape[a]
+                                         for a in self.worker_axes]))
+            tasks = ovo.build_tasks(x, y, pad_tasks_to=n_workers)
+            if self.mesh is not None:
+                fit = dist.distributed_ovo_fit(
+                    tasks, self.mesh, self.worker_axes, solver=self.solver,
+                    smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
+                    kernel=self.kernel_params)
+            else:
+                fit = dist.vmapped_ovo_fit(
+                    tasks, solver=self.solver, smo_cfg=self.smo_cfg,
+                    gd_cfg=self.gd_cfg, kernel=self.kernel_params)
+            self._binary = False
+            self._tasks = tasks
+            self._fit = jax.tree.map(np.asarray, fit)
+            self.n_iter_ = int(np.max(self._fit.n_iter))
+            self.converged_ = bool(np.all(
+                self._fit.converged[:ovo.n_binary_tasks(len(classes))]))
+        self._fitted = True
+        return self
+
+    # ------------------------------------------------------------- predict
+    def decision_function(self, xt: np.ndarray) -> np.ndarray:
+        assert self._fitted
+        xt = jnp.asarray(np.asarray(xt, np.float32))
+        if self._binary:
+            df = smo.decision_function(
+                jnp.asarray(self._x), jnp.asarray(self._y),
+                jnp.asarray(self.alpha_), self.b_, xt,
+                kernel=self.kernel_params)
+            return np.asarray(df)
+        # (C, n_test) stacked binary decisions
+        gram_fn = K.make_gram_fn(self.kernel_params)
+
+        def one(xtask, ytask, alpha, b):
+            kmat = gram_fn(xt, xtask)
+            return kmat @ (alpha * ytask) + b
+
+        df = jax.vmap(one)(jnp.asarray(self._tasks.x),
+                           jnp.asarray(self._tasks.y),
+                           jnp.asarray(self._fit.alpha),
+                           jnp.asarray(self._fit.b))
+        return np.asarray(df)
+
+    def predict(self, xt: np.ndarray) -> np.ndarray:
+        df = self.decision_function(xt)
+        if self._binary:
+            return np.where(df > 0, self.classes_[0], self.classes_[1])
+        c_real = ovo.n_binary_tasks(len(self.classes_))
+        idx = ovo.vote(jnp.asarray(df), self._tasks.pairs,
+                       self._tasks.classes, c_real)
+        return self.classes_[np.asarray(idx)]
+
+    def score(self, xt: np.ndarray, yt: np.ndarray) -> float:
+        return float(np.mean(self.predict(xt) == np.asarray(yt)))

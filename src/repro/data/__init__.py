@@ -1,0 +1,7 @@
+from repro.data.iris import load_iris
+from repro.data.synth import (load_breast_cancer_like, load_pavia_like,
+                              make_blobs)
+from repro.data.pipeline import normalize, train_test_split
+
+__all__ = ["load_iris", "load_breast_cancer_like", "load_pavia_like",
+           "make_blobs", "normalize", "train_test_split"]

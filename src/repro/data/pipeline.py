@@ -1,0 +1,70 @@
+"""Dataset utilities: normalization, splits, and sharded batching."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def normalize(x: np.ndarray, *, kind: str = "standard") -> np.ndarray:
+    """standard: zero-mean unit-variance per feature; minmax: [0, 1]."""
+    x = np.asarray(x, np.float32)
+    if kind == "standard":
+        mu = x.mean(0, keepdims=True)
+        sd = x.std(0, keepdims=True)
+        return (x - mu) / np.maximum(sd, 1e-8)
+    if kind == "minmax":
+        lo = x.min(0, keepdims=True)
+        hi = x.max(0, keepdims=True)
+        return (x - lo) / np.maximum(hi - lo, 1e-8)
+    raise ValueError(kind)
+
+
+def train_test_split(x: np.ndarray, y: np.ndarray, *, test_frac: float = 0.2,
+                     seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    perm = rng.permutation(n)
+    n_test = int(round(n * test_frac))
+    te, tr = perm[:n_test], perm[n_test:]
+    return x[tr], y[tr], x[te], y[te]
+
+
+def subsample_per_class(x: np.ndarray, y: np.ndarray, n_per_class: int,
+                        *, classes: Optional[list] = None, seed: int = 0):
+    """The paper's protocol: N sample points *per class*."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y) if classes is None else np.asarray(classes)
+    idx = []
+    for c in classes:
+        members = np.where(y == c)[0]
+        take = min(n_per_class, len(members))
+        idx.append(rng.choice(members, take, replace=False))
+    idx = np.concatenate(idx)
+    return x[idx], y[idx]
+
+
+def batch_iterator(x: np.ndarray, y: np.ndarray, batch_size: int, *,
+                   seed: int = 0, mesh: Optional[Mesh] = None,
+                   data_axes: tuple[str, ...] = ("data",),
+                   drop_remainder: bool = True
+                   ) -> Iterator[tuple[jax.Array, jax.Array]]:
+    """Shuffled epoch iterator; with a mesh, batches are device_put with
+    the batch dimension sharded over ``data_axes``."""
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    perm = rng.permutation(n)
+    sharding = None
+    if mesh is not None:
+        sharding = NamedSharding(mesh, P(data_axes))
+    for start in range(0, n - (batch_size - 1 if drop_remainder else 0),
+                       batch_size):
+        sel = perm[start:start + batch_size]
+        bx, by = jnp.asarray(x[sel]), jnp.asarray(y[sel])
+        if sharding is not None:
+            bx = jax.device_put(bx, sharding)
+            by = jax.device_put(by, sharding)
+        yield bx, by

@@ -1,0 +1,69 @@
+"""Batched SVM decision-function Pallas kernel (inference hot spot).
+
+f(z) = sum_i coef_i K(x_i, z) + b  for a batch of test rows z, fusing the
+RBF Gram block with the contraction against coef = alpha*y so the (nt, n)
+kernel matrix never materializes in HBM:
+
+  grid (nt/bt, n/bn):  per step, VMEM holds the test tile (bt, d), the
+  train tile (bn, d) and coef tile (1, bn); computes the RBF block on the
+  MXU, contracts it with coef, and accumulates into the (bt, 1) output
+  column. The train axis (reduction) is the innermost sequential grid
+  dimension; features stay resident per-tile (SVM d is small — 4..102 —
+  so one d-chunk suffices; ops.py pads d to the 128 lane width).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decision_kernel(xt_ref, xr_ref, coef_ref, out_ref, *,
+                     gamma: float, n_steps: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xt = xt_ref[...].astype(jnp.float32)     # (bt, d)
+    xr = xr_ref[...].astype(jnp.float32)     # (bn, d)
+    coef = coef_ref[...].astype(jnp.float32)  # (1, bn)
+
+    dot = jax.lax.dot_general(xt, xr, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    t2 = jnp.sum(xt * xt, axis=1, keepdims=True)       # (bt, 1)
+    r2 = jnp.sum(xr * xr, axis=1, keepdims=True).T     # (1, bn)
+    kblock = jnp.exp(-gamma * jnp.maximum(t2 + r2 - 2.0 * dot, 0.0))
+    out_ref[...] += jnp.sum(kblock * coef, axis=1, keepdims=True)
+
+
+def decision_pallas(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
+                    *, gamma: float, block_t: int = 128, block_n: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Returns (nt,) decision values WITHOUT bias (add b outside).
+
+    Shapes must be pre-padded: nt % block_t == 0, n % block_n == 0;
+    padded train rows must carry coef == 0.
+    """
+    nt, d = x_test.shape
+    n, d2 = x_train.shape
+    assert d == d2 and nt % block_t == 0 and n % block_n == 0
+    grid = (nt // block_t, n // block_n)
+    kernel = functools.partial(_decision_kernel, gamma=gamma,
+                               n_steps=grid[1])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, k: (k, 0)),
+            pl.BlockSpec((1, block_n), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_t, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, 1), jnp.float32),
+        interpret=interpret,
+    )(x_test, x_train, coef.reshape(1, n))
+    return out[:, 0]

@@ -1,0 +1,143 @@
+"""Public, padding-aware jit wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses. They
+(1) pad every axis up to the kernel's block multiples (MXU/VMEM
+alignment), (2) dispatch the pallas_call, (3) slice the padding back off.
+``interpret`` defaults to auto: True off-TPU (this container), False on
+real TPU hardware.
+
+Padding correctness notes:
+* Gram: padded FEATURE columns are zero in both operands -> contribute 0
+  to the dot and to the squared norms; padded SAMPLE rows produce extra
+  rows/cols that are sliced off.
+* decision: padded train rows carry coef = 0 -> contribute 0.
+* kkt_select: padded entries get mask = False -> +-inf sentinels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decision as _decision
+from repro.kernels import kkt_select as _kkt
+from repro.kernels import rbf_gram as _gram
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("gamma", "mode", "block_n", "block_m",
+                                   "block_d", "interpret"))
+def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float = 1.0,
+             mode: str = "rbf", block_n: int = 128, block_m: int = 128,
+             block_d: int = 128, interpret: bool | None = None) -> jax.Array:
+    """K(a, b): (n, m) float32 Gram matrix (rbf or linear)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    n, m = a.shape[0], b.shape[0]
+    a = _pad_to(_pad_to(a.astype(jnp.float32), 1, block_d), 0, block_n)
+    b = _pad_to(_pad_to(b.astype(jnp.float32), 1, block_d), 0, block_m)
+    out = _gram.rbf_gram_pallas(a, b, gamma=gamma, mode=mode,
+                                block_n=block_n, block_m=block_m,
+                                block_d=block_d, interpret=interpret)
+    return out[:n, :m]
+
+
+@partial(jax.jit, static_argnames=("c", "block", "interpret"))
+def kkt_select(f: jax.Array, alpha: jax.Array, y: jax.Array,
+               mask: jax.Array, *, c: float = 1.0, block: int = 1024,
+               interpret: bool | None = None):
+    """Fused masked KKT selection: (b_up, i_up, b_low, i_low)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    n = f.shape[0]
+    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    fp = _pad_to(f.astype(jnp.float32), 0, block)
+    ap = _pad_to(alpha.astype(jnp.float32), 0, block)
+    # padded y = +1 with alpha = 0 would look movable; mask handles it
+    yp = _pad_to(y.astype(jnp.float32), 0, block)
+    mp = _pad_to(mask.astype(jnp.int32), 0, block)
+    upv, upi, lowv, lowi = _kkt.kkt_select_pallas(fp, ap, yp, mp, c=c,
+                                                  block=block,
+                                                  interpret=interpret)
+    t_up = jnp.argmin(upv)
+    t_low = jnp.argmax(lowv)
+    return upv[t_up], upi[t_up], lowv[t_low], lowi[t_low]
+
+
+@partial(jax.jit, static_argnames=("gamma", "block_t", "block_n",
+                                   "interpret"))
+def decision(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
+             b: jax.Array | float = 0.0, *, gamma: float = 1.0,
+             block_t: int = 128, block_n: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """f(z) = K(z, X) @ coef + b for a batch of test rows."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    nt = x_test.shape[0]
+    d_mult = 128
+    xt = _pad_to(_pad_to(x_test.astype(jnp.float32), 1, d_mult), 0, block_t)
+    xr = _pad_to(_pad_to(x_train.astype(jnp.float32), 1, d_mult), 0, block_n)
+    cf = _pad_to(coef.astype(jnp.float32), 0, block_n)
+    out = _decision.decision_pallas(xt, xr, cf, gamma=gamma,
+                                    block_t=block_t, block_n=block_n,
+                                    interpret=interpret)
+    return out[:nt] + b
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256,
+                    interpret: bool | None = None) -> jax.Array:
+    """Flash attention over (B, S, H, D) tensors with GQA broadcast.
+
+    Pads S to tile multiples (padded KV masked out via causality for
+    causal=True; for the padded q rows the outputs are sliced off)."""
+    from repro.kernels import flash_attn as _fa
+    if interpret is None:
+        interpret = _auto_interpret()
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:  # GQA: broadcast kv heads to q heads
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    bq = min(block_q, max(128, sq))
+    bk = min(block_k, max(128, k.shape[1]))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * h, qp.shape[1], d)
+    kf = kp.transpose(0, 2, 1, 3).reshape(b * h, kp.shape[1], d)
+    vf = vp.transpose(0, 2, 1, 3).reshape(b * h, vp.shape[1],
+                                          vp.shape[3])
+    out = _fa.flash_attention_pallas(qf, kf, vf, causal=causal,
+                                     block_q=bq, block_k=bk,
+                                     interpret=interpret,
+                                     kv_len=k.shape[1])
+    out = out.reshape(b, h, qp.shape[1], vp.shape[3]).transpose(0, 2, 1, 3)
+    return out[:, :sq]
+
+
+def gram_row_fn(*, gamma: float, block: int = 128,
+                interpret: bool | None = None):
+    """``(X, z) -> K(X, z)`` single-row closure for the SMO f-cache update
+    (the on-the-fly, O(n d)-memory mode)."""
+    def row(x, z):
+        return rbf_gram(x, z[None, :], gamma=gamma, block_n=block,
+                        block_m=128, interpret=interpret)[:, 0]
+    return row

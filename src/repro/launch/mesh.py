@@ -1,0 +1,26 @@
+"""Production mesh construction (TPU v5e pods).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the "pod" axis is
+the slowest (DCN/ICI-sparse) dimension and only ever carries
+data-parallel traffic (gradient all-reduce), matching how real multi-pod
+slices are scheduled.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_workers: int = 1, axis: str = "workers"):
+    """Small mesh over however many (possibly forced-host) devices exist —
+    used by tests and the SVM distributed examples."""
+    return jax.make_mesh((n_workers,), (axis,))

@@ -1,0 +1,69 @@
+"""Abstract input specs (ShapeDtypeStruct) per (architecture x shape).
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+allocation. ``input_specs(cfg, shape, mesh)`` returns (batch_specs,
+batch_shardings); decode shapes additionally get cache specs from the
+model itself.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding import rules
+
+
+def _dp_spec(mesh: Optional[Mesh]) -> P:
+    if mesh is None:
+        return P()
+    return P(rules.dp_axes(mesh))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                mesh: Optional[Mesh]) -> tuple[dict, dict]:
+    """Training / prefill batch: tokens (+ modality stubs)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    dp = _dp_spec(mesh)
+    text = s
+    specs: dict = {}
+    shard: dict = {}
+    if cfg.arch_type == "vlm":
+        text = s - cfg.vision_tokens      # total length stays seq_len
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        shard["vision_embeds"] = P(dp[0] if dp else None, None, None)
+    if cfg.arch_type == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        shard["frames"] = P(dp[0] if dp else None, None, None)
+    specs["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    shard["tokens"] = P(dp[0] if dp else None, None)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        shard["labels"] = P(dp[0] if dp else None, None)
+    return specs, shard
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape,
+                       mesh: Optional[Mesh]) -> tuple[Any, Any]:
+    b = shape.global_batch
+    dp = _dp_spec(mesh)
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return tok, P(dp[0] if dp and b > 1 else None)
+
+
+def abstract_params(model, key=None) -> tuple[Any, Any]:
+    """(ShapeDtypeStruct params tree, logical spec tree) — no allocation."""
+    import jax.random as jrandom
+    key = jrandom.PRNGKey(0) if key is None else key
+    shapes = jax.eval_shape(model.init, key)
+    return shapes[0], jax.eval_shape(lambda: None) if False else shapes
+
+
+def abstract_cache(model, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: model.cache_init(batch, max_len))

@@ -1,0 +1,467 @@
+"""Shared transformer building blocks (pure-functional, pjit-friendly).
+
+Conventions
+-----------
+* Params are nested dicts of f32 arrays; a parallel "logical spec" tree
+  (same structure, leaves = tuples of logical axis names from
+  ``repro.sharding.rules``) describes the production sharding.
+* Compute runs in bf16 with f32 softmax/norm accumulators.
+* Every block comes in three modes: ``train/prefill`` (full sequence,
+  optionally writing a KV cache) and ``decode`` (one token + cache).
+* Layer stacks are scanned (``jax.lax.scan``) over a leading layer axis
+  so HLO size is depth-independent (95-layer models compile in seconds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import runtime as RT
+
+Params = dict
+Specs = dict
+
+ACT_DTYPE = jnp.bfloat16
+
+
+# ------------------------------------------------------------------- init
+
+def _normal(key, shape, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32))
+
+
+def dense_init(key, d_in, d_out, scale=0.02):
+    return _normal(key, (d_in, d_out), scale)
+
+
+# ------------------------------------------------------------------ norms
+
+def wgather(w, logical):
+    """Under GATHER_WEIGHTS, constrain an fsdp-sharded weight to TP-only
+    sharding at its use site: XLA then all-gathers the (small) weight
+    instead of all-reducing the (huge) activation partials that a
+    contraction over an fsdp-sharded dim otherwise produces."""
+    if not RT.GATHER_WEIGHTS:
+        return w
+    from jax.sharding import PartitionSpec as P
+    spec = P(*[("model" if n == "tp" else None) for n in logical])
+    return jax.lax.with_sharding_constraint(w, spec)
+
+
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w)).astype(x.dtype)
+
+
+def rmsnorm_init(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ------------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    if x.ndim == 4:  # (B, S, H, D): broadcast over heads
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int, offset=0):
+    pos = jnp.arange(seq_len) + offset
+    half = d // 2
+    freq = 10_000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)  # (S, d)
+
+
+# -------------------------------------------------------------- attention
+
+def _gqa_scores(q, k, scale):
+    """q (B,Sq,H,D), k (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk) f32."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if RT.SCORES_BF16:
+        # store the (..., Sq, Sk) tensor in bf16 (halves the dominant
+        # HBM-traffic term); softmax still reduces in f32
+        s = s.astype(jnp.bfloat16)
+    return s
+
+
+def _mask_bias(sq, sk, *, causal, window, q_offset, kv_valid_len=None):
+    qpos = jnp.arange(sq)[:, None] + q_offset          # (Sq, 1)
+    kpos = jnp.arange(sk)[None, :]                     # (1, Sk)
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    if kv_valid_len is not None:
+        ok &= kpos < kv_valid_len
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                   kv_valid_len=None, softcap=0.0):
+    """Materialized-scores attention (short sequences / decode)."""
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q, k, scale)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = scores + _mask_bias(q.shape[1], k.shape[1], causal=causal,
+                                 window=window, q_offset=q_offset,
+                                 kv_valid_len=kv_valid_len
+                                 ).astype(scores.dtype)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    b, sq, hkv, g, d = out.shape
+    return out.reshape(b, sq, hkv * g, d)
+
+
+def chunked_attention(q, k, v, *, chunk=1024, causal=True, window=0,
+                      q_offset=0):
+    """Flash-style online-softmax over KV chunks — O(Sq * chunk) score
+    memory instead of O(Sq * Sk). Used for 32k+ prefill.
+
+    (This is the XLA-lowered path used by the dry-run; a Pallas flash
+    kernel with the same oracle lives in repro/kernels/flash_attn.py.)
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                       # may differ from d (MLA)
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    g = h // hkv
+    scale = d ** -0.5
+    n_chunks = sk // chunk
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        c_idx, k_blk, v_blk = xs
+        scores = _gqa_scores(q, k_blk, scale)          # (B,Hkv,G,Sq,chunk)
+        kpos = c_idx * chunk + jnp.arange(chunk)[None, :]
+        ok = jnp.ones((sq, chunk), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window:
+            ok &= kpos > qpos - window
+        scores = scores + jnp.where(ok, 0.0, -jnp.inf).astype(scores.dtype)
+        m_new = jnp.maximum(m, jnp.max(scores, -1))
+        # guard: fully-masked rows keep m = -inf -> exp(0)=1 but l stays 0
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        corr = jnp.exp(jnp.where(jnp.isinf(m), m, m - m_safe))
+        p = jnp.exp(scores - m_safe[..., None])
+        l_new = l * corr + jnp.sum(p, -1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v_blk)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dv), v.dtype)
+    (m, l, acc), _ = RT.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None].astype(acc.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+
+
+def attention_any(q, k, v, **kw):
+    if (q.shape[1] >= RT.CHUNKED_THRESHOLD
+            and q.shape[1] == k.shape[1]):
+        kw.pop("kv_valid_len", None)
+        kw.pop("softcap", None)
+        return chunked_attention(q, k, v, **kw)
+    return full_attention(q, k, v, **kw)
+
+
+# ------------------------------------------------------------ GQA block
+
+def gqa_init(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d, h * dh),
+        "wk": dense_init(ks[1], d, hkv * dh),
+        "wv": dense_init(ks[2], d, hkv * dh),
+        "wo": dense_init(ks[3], h * dh, d, scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    specs = {"wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"),
+             "wv": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+    return params, specs
+
+
+def gqa_apply(p: Params, x, cfg: ModelConfig, *, positions, causal=True,
+              window=0, cache: Optional[dict] = None,
+              cache_pos=None, update_cache=False):
+    """Returns (out, new_cache). Modes:
+       * train: cache=None
+       * prefill: update_cache=True, cache dict of zeros provided
+       * decode: x has Sq=1, cache holds Sk past keys; cache_pos = scalar
+         write offset (ring position for windowed layers).
+    """
+    b, sq, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xb = x.astype(ACT_DTYPE)
+    wg = lambda w: wgather(w, ("fsdp", "tp")).astype(ACT_DTYPE)
+    q = (xb @ wg(p["wq"])).reshape(b, sq, h, dh)
+    k = (xb @ wg(p["wk"])).reshape(b, sq, hkv, dh)
+    v = (xb @ wg(p["wv"])).reshape(b, sq, hkv, dh)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cache is not None and sq == 1:           # decode
+        slot = cache_pos if window else cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        valid = jnp.minimum(cache["len"] + 1, ck.shape[1])
+        out = full_attention(q, ck, cv, causal=False, kv_valid_len=valid,
+                             softcap=cfg.logit_softcap)
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + 1}
+    else:                                        # train / prefill
+        out = attention_any(q, k, v, causal=causal, window=window,
+                            q_offset=0)
+        if update_cache and cache is not None:
+            cap = cache["k"].shape[1]
+            if sq >= cap:
+                # ring buffer: position p lives at slot p % cap; the last
+                # `cap` keys land rolled by sq % cap so decode writes at
+                # slot len % cap stay consistent
+                shift = sq % cap
+                nk = jnp.roll(k[:, -cap:], shift, axis=1)
+                nv = jnp.roll(v[:, -cap:], shift, axis=1)
+            else:
+                nk = jax.lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, 0, 0, 0))
+                nv = jax.lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, 0, 0, 0))
+            new_cache = {"k": nk, "v": nv, "len": cache["len"] + sq}
+    out = out.reshape(b, sq, h * dh) @ wgather(
+        p["wo"], ("tp", "fsdp")).astype(ACT_DTYPE)
+    return out.astype(x.dtype), new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, *,
+                   window: int = 0) -> dict:
+    s = min(window, max_len) if window else max_len
+    shape = (batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, ACT_DTYPE),
+            "v": jnp.zeros(shape, ACT_DTYPE),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def gqa_cache_specs(window: bool = False) -> dict:
+    # batch over dp; sequence over tp ("sp") for the huge flat caches.
+    # Window (ring) caches also shard seq under WINDOW_CACHE_SP: a
+    # model-replicated window cache forces a full-cache all-gather per
+    # decode step (measured 2x335 MB/group on gemma3), because the new
+    # K/V rows arrive model-sharded from the TP projections.
+    seq_ax = ("sp" if RT.WINDOW_CACHE_SP else None) if window else "sp"
+    return {"k": ("dp", seq_ax, None, None),
+            "v": ("dp", seq_ax, None, None), "len": ()}
+
+
+# ------------------------------------------------------------- MLA block
+
+def _mla_heads(cfg: ModelConfig) -> int:
+    if RT.MLA_PAD_HEADS:
+        return -(-cfg.n_heads // 16) * 16
+    return cfg.n_heads
+
+
+def mla_init(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    d, h = cfg.d_model, _mla_heads(cfg)
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    params = {
+        "wq_a": dense_init(ks[0], d, rq),
+        "q_norm": rmsnorm_init(rq),
+        "wq_b": dense_init(ks[1], rq, h * (dn + dr)),
+        "wkv_a": dense_init(ks[2], d, rkv + dr),
+        "kv_norm": rmsnorm_init(rkv),
+        "wkv_b": dense_init(ks[3], rkv, h * (dn + dv)),
+        "wo": dense_init(ks[4], h * dv, d,
+                         scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if h != cfg.n_heads:  # zero the dummy heads' output rows: the padded
+        # heads are then function-inert at init (pure sharding padding)
+        wo = params["wo"].reshape(h, dv, d)
+        wo = wo.at[cfg.n_heads:].set(0.0)
+        params["wo"] = wo.reshape(h * dv, d)
+    specs = {"wq_a": ("fsdp", None), "q_norm": (None,),
+             "wq_b": ("fsdp", "tp"), "wkv_a": ("fsdp", None),
+             "kv_norm": (None,), "wkv_b": ("fsdp", "tp"),
+             "wo": ("tp", "fsdp")}
+    return params, specs
+
+
+def _mla_qkr(p, x, cfg, positions):
+    """Shared q / compressed-kv projections. Returns q_nope (B,S,H,dn),
+    q_rope (B,S,H,dr), c_kv (B,S,rkv), k_rope (B,S,1,dr)."""
+    b, s, _ = x.shape
+    h = _mla_heads(cfg)
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    xb = x.astype(ACT_DTYPE)
+    q = rmsnorm(xb @ p["wq_a"].astype(ACT_DTYPE), p["q_norm"], cfg.norm_eps)
+    q = (q @ p["wq_b"].astype(ACT_DTYPE)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = xb @ p["wkv_a"].astype(ACT_DTYPE)                  # (B,S,rkv+dr)
+    c_kv = rmsnorm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][:, :, None, :]      # (B,S,1,dr)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p: Params, x, cfg: ModelConfig, *, positions,
+              cache: Optional[dict] = None, update_cache=False):
+    """MLA attention. Prefill/train expands per-head K/V; decode uses the
+    ABSORBED path against the compressed cache (the MLA trick)."""
+    b, sq, d = x.shape
+    h = _mla_heads(cfg)
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(p, x, cfg, positions)
+    wkv_b = p["wkv_b"].astype(ACT_DTYPE).reshape(rkv, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]           # (rkv,H,dn/(dv))
+
+    new_cache = cache
+    if cache is not None and sq == 1:  # ---- absorbed decode
+        slot = cache["len"]
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, slot, 0))
+        krp = jax.lax.dynamic_update_slice(cache["krope"],
+                                           k_rope[:, :, 0, :], (0, slot, 0))
+        # absorb W_uk into q:  q_c (B,1,H,rkv)
+        q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+        s_c = jnp.einsum("bqhr,bkr->bhqk", q_c, ckv,
+                         preferred_element_type=jnp.float32)
+        s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope, krp,
+                         preferred_element_type=jnp.float32)
+        scores = (s_c + s_r) * scale
+        valid = jnp.arange(ckv.shape[1])[None, None, None, :] < (slot + 1)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, -1).astype(ACT_DTYPE)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", w, ckv)          # (B,1,H,rkv)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)       # absorb W_uv
+        new_cache = {"ckv": ckv, "krope": krp, "len": cache["len"] + 1}
+    else:  # ---- train / prefill: expand per-head K and V
+        kv = jnp.einsum("bkr,rhe->bkhe", c_kv, wkv_b)       # (B,S,H,dn+dv)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, sq, h, dr))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = attention_any(q, k, v, causal=True)
+        if update_cache and cache is not None:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice(cache["ckv"], c_kv,
+                                                    (0, 0, 0)),
+                "krope": jax.lax.dynamic_update_slice(
+                    cache["krope"], k_rope[:, :, 0, :], (0, 0, 0)),
+                "len": cache["len"] + sq,
+            }
+    out = out.reshape(b, sq, h * dv) @ p["wo"].astype(ACT_DTYPE)
+    return out.astype(x.dtype), new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), ACT_DTYPE),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), ACT_DTYPE),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def mla_cache_specs() -> dict:
+    return {"ckv": ("dp", "sp", None), "krope": ("dp", "sp", None),
+            "len": ()}
+
+
+# -------------------------------------------------------------------- FFN
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> tuple[Params, Specs]:
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    if cfg.act == "swiglu":
+        params = {"w_gate": dense_init(ks[0], d, f),
+                  "w_up": dense_init(ks[1], d, f),
+                  "w_down": dense_init(ks[2], f, d, scale=out_scale)}
+        specs = {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+                 "w_down": ("tp", "fsdp")}
+    else:
+        params = {"w_in": dense_init(ks[0], d, f),
+                  "w_down": dense_init(ks[2], f, d, scale=out_scale)}
+        specs = {"w_in": ("fsdp", "tp"), "w_down": ("tp", "fsdp")}
+    return params, specs
+
+
+def ffn_apply(p: Params, x, cfg: ModelConfig):
+    xb = x.astype(ACT_DTYPE)
+    wg = lambda w: wgather(w, ("fsdp", "tp")).astype(ACT_DTYPE)
+    wd = wgather(p["w_down"], ("tp", "fsdp")).astype(ACT_DTYPE)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(xb @ wg(p["w_gate"])) * (xb @ wg(p["w_up"]))
+    else:
+        h = jax.nn.gelu(xb @ wg(p["w_in"]))
+    return (h @ wd).astype(x.dtype)
+
+
+# -------------------------------------------------------- embed / unembed
+
+def embed_init(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    ks = jax.random.split(key, 2)
+    v = cfg.padded_vocab
+    params = {"table": _normal(ks[0], (v, cfg.d_model))}
+    specs = {"table": ("tp", "fsdp")}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], cfg.d_model, v)
+        specs["unembed"] = ("fsdp", "tp")
+    return params, specs
+
+
+def embed_apply(p: Params, tokens):
+    if RT.EMBED_ONEHOT:
+        # vocab-parallel lookup: one-hot matmul against the vocab-sharded
+        # table lowers to a local matmul + psum instead of all-gathering
+        # the table (gemma3's 4 GB table made decode collective-bound)
+        v = p["table"].shape[0]
+        oh = jax.nn.one_hot(tokens, v, dtype=ACT_DTYPE)
+        return oh @ p["table"].astype(ACT_DTYPE)
+    return jnp.take(p["table"].astype(ACT_DTYPE), tokens, axis=0)
+
+
+def unembed_apply(p: Params, x, cfg: ModelConfig):
+    """Logits over the PADDED vocab; padded columns masked to -1e9 so
+    they are inert in both softmax-CE and greedy/sampled decode."""
+    xb = x.astype(ACT_DTYPE)
+    if "unembed" in p:
+        logits = xb @ p["unembed"].astype(ACT_DTYPE)
+    else:
+        logits = xb @ p["table"].astype(ACT_DTYPE).T
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e9, logits.dtype))
+    return logits

@@ -1,0 +1,245 @@
+"""Mamba2 / SSD (state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD algorithm for train/prefill (quadratic within Q-token
+chunks, linear recurrence across chunks — the paper's tensor-core
+formulation maps straight onto the TPU MXU), and the O(1)-state
+recurrent step for decode.
+
+Discretization (per head h, state n, channel p):
+    h_t = exp(A_h dt_t) * h_{t-1} + dt_t * B_t[n] * x_t[p]
+    y_t = sum_n C_t[n] h_t[n, p] + D_h x_t[p]
+
+The projections are SPLIT (w_z/w_x/w_B/w_C/w_dt instead of one packed
+in_proj) so each piece gets a clean tensor-parallel sharding: head-space
+(d_inner, dt) over "tp", the group-shared B/C projections replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import runtime as RT
+from repro.models.layers import ACT_DTYPE, dense_init, rmsnorm, rmsnorm_init
+
+Params = dict
+Specs = dict
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.expand * cfg.d_model
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return 1
+
+
+def mamba2_init(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    d = cfg.d_model
+    di = _d_inner(cfg)
+    h, n, kk = cfg.ssm_heads, cfg.ssm_state, cfg.conv_kernel
+    g = _n_groups(cfg)
+    ks = jax.random.split(key, 10)
+    dt = jnp.exp(jax.random.uniform(ks[5], (h,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    params = {
+        "w_z": dense_init(ks[0], d, di),
+        "w_x": dense_init(ks[1], d, di),
+        "w_B": dense_init(ks[2], d, g * n),
+        "w_C": dense_init(ks[3], d, g * n),
+        "w_dt": dense_init(ks[4], d, h),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),       # inv-softplus
+        "A_log": jnp.log(jax.random.uniform(ks[6], (h,), jnp.float32,
+                                            1.0, 16.0)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": 0.1 * jax.random.normal(ks[7], (kk, di), jnp.float32),
+        "conv_B": 0.1 * jax.random.normal(ks[8], (kk, g * n), jnp.float32),
+        "conv_C": 0.1 * jax.random.normal(ks[9], (kk, g * n), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "w_out": dense_init(ks[0], di, d,
+                            scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+    specs = {
+        "w_z": ("fsdp", "tp"), "w_x": ("fsdp", "tp"),
+        "w_B": ("fsdp", None), "w_C": ("fsdp", None),
+        "w_dt": ("fsdp", "tp"), "dt_bias": ("tp",), "A_log": ("tp",),
+        "D": ("tp",), "conv_x": (None, "tp"), "conv_B": (None, None),
+        "conv_C": (None, None), "norm": ("tp",), "w_out": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, *, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). state: (B,K-1,C) left
+    context (decode); returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return y, new_state
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, *, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x (B,S,H,P), dt (B,S,H) >0, a (H,) <0, bmat/cmat (B,S,G,N).
+    Returns y (B,S,H,P), final_state (B,H,N,P).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(f32)
+    br = bmat.reshape(b, nc, chunk, g, n).astype(f32)
+    cr = cmat.reshape(b, nc, chunk, g, n).astype(f32)
+
+    da = dtr * a                                     # (B,NC,Q,H) negative
+    cs = jnp.cumsum(da, axis=2)                      # inclusive cumsum
+    total = cs[:, :, -1:, :]                         # (B,NC,1,H)
+
+    # ---- intra-chunk (quadratic within the chunk, MXU-friendly)
+    # L[q, kk] = exp(cs_q - cs_kk) for q >= kk
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]     # (B,NC,Q,K,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqgn,bckgn->bcqkg", cr, br)         # (B,NC,Q,K,G)
+    cb = jnp.repeat(cb, hpg, axis=-1)                     # G -> H
+    w_intra = cb * l_mat * dtr[:, :, None, :, :]          # (B,NC,Q,K,H)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", w_intra, xr)
+
+    # ---- chunk states: S_c = sum_k B_k (decay_out*dt)_k x_k -> (B,NC,H,N,P)
+    decay_out = jnp.exp(total - cs)                       # (B,NC,Q,H)
+    wk = decay_out * dtr                                  # (B,NC,Q,H)
+    if g == 1:
+        states = jnp.einsum("bckn,bckh,bckhp->bchnp", br[:, :, :, 0, :],
+                            wk, xr)
+    else:
+        brh = jnp.repeat(br, hpg, axis=3)                 # (B,NC,Q,H,N)
+        states = jnp.einsum("bckhn,bckh,bckhp->bchnp", brh, wk, xr)
+
+    # ---- inter-chunk recurrence over NC chunks
+    chunk_decay = jnp.exp(total[:, :, 0, :])              # (B,NC,H)
+    s0 = (jnp.zeros((b, h, n, p), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def scan_fn(carry, xs):
+        st, dec = xs                                      # (B,H,N,P),(B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                 # emit state BEFORE chunk
+
+    final, prev_states = RT.scan(
+        scan_fn, s0, (states.transpose(1, 0, 2, 3, 4),
+                      chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,NC,H,N,P)
+
+    # ---- inter-chunk contribution
+    decay_in = jnp.exp(cs)                                # (B,NC,Q,H)
+    if g == 1:
+        y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cr[:, :, :, 0, :],
+                           decay_in, prev_states)
+    else:
+        crh = jnp.repeat(cr, hpg, axis=3)
+        y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", crh, decay_in,
+                           prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, a, bvec, cvec, state):
+    """One recurrent step. x (B,H,P), dt (B,H), bvec/cvec (B,G,N),
+    state (B,H,N,P) -> (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    h, g = x.shape[1], bvec.shape[1]
+    bh = jnp.repeat(bvec.astype(f32), h // g, axis=1)      # (B,H,N)
+    ch = jnp.repeat(cvec.astype(f32), h // g, axis=1)
+    dec = jnp.exp(dt * a)                                  # (B,H)
+    bx = jnp.einsum("bhn,bhp->bhnp", bh, dt[..., None] * x)
+    new_state = state * dec[:, :, None, None] + bx
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state)
+    return y, new_state
+
+
+def mamba2_apply(p: Params, x, cfg: ModelConfig, *,
+                 cache: Optional[dict] = None, update_cache=False):
+    """x (B,S,D) -> (out, new_cache). cache = {"conv_x","conv_B","conv_C",
+    "ssm"} for decode; S==1 takes the recurrent path."""
+    b, s, d = x.shape
+    di = _d_inner(cfg)
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    pdim = di // h
+    g = _n_groups(cfg)
+    xb = x.astype(ACT_DTYPE)
+
+    z = xb @ p["w_z"].astype(ACT_DTYPE)                   # (B,S,di)
+    xs = xb @ p["w_x"].astype(ACT_DTYPE)
+    bs = xb @ p["w_B"].astype(ACT_DTYPE)                  # (B,S,G*N)
+    cs_ = xb @ p["w_C"].astype(ACT_DTYPE)
+    dt_raw = (xb @ p["w_dt"].astype(ACT_DTYPE)).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])           # (B,S,H)
+    a = -jnp.exp(p["A_log"])                              # (H,)
+
+    decode = cache is not None and s == 1
+    cx = cache["conv_x"] if decode else None
+    cb = cache["conv_B"] if decode else None
+    cc = cache["conv_C"] if decode else None
+    xs, ncx = _causal_conv(xs, p["conv_x"].astype(ACT_DTYPE), state=cx)
+    bs, ncb = _causal_conv(bs, p["conv_B"].astype(ACT_DTYPE), state=cb)
+    cs_, ncc = _causal_conv(cs_, p["conv_C"].astype(ACT_DTYPE), state=cc)
+    xs, bs, cs_ = jax.nn.silu(xs), jax.nn.silu(bs), jax.nn.silu(cs_)
+
+    xh = xs.reshape(b, s, h, pdim)
+    bmat = bs.reshape(b, s, g, n)
+    cmat = cs_.reshape(b, s, g, n)
+
+    if decode:
+        y, new_ssm = ssd_decode_step(xh[:, 0], dt[:, 0], a, bmat[:, 0],
+                                     cmat[:, 0], cache["ssm"])
+        y = y[:, None]                                    # (B,1,H,P)
+        new_cache = {"conv_x": ncx, "conv_B": ncb, "conv_C": ncc,
+                     "ssm": new_ssm}
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, final = ssd_chunked(xh, dt, a, bmat, cmat,
+                               chunk=min(cfg.ssm_chunk, s),
+                               init_state=init)
+        new_cache = cache
+        if update_cache and cache is not None:
+            new_cache = {"conv_x": ncx, "conv_B": ncb, "conv_C": ncc,
+                         "ssm": final}
+
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(b, s, di).astype(ACT_DTYPE)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(ACT_DTYPE)
+    return out.astype(x.dtype), new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    di = _d_inner(cfg)
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    g = _n_groups(cfg)
+    k = cfg.conv_kernel
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, di), ACT_DTYPE),
+        "conv_B": jnp.zeros((batch, k - 1, g * n), ACT_DTYPE),
+        "conv_C": jnp.zeros((batch, k - 1, g * n), ACT_DTYPE),
+        "ssm": jnp.zeros((batch, h, n, di // h), jnp.float32),
+    }
+
+
+def mamba2_cache_specs() -> dict:
+    return {"conv_x": ("dp", None, "tp"), "conv_B": ("dp", None, None),
+            "conv_C": ("dp", None, None), "ssm": ("dp", "tp", None, None)}

@@ -1,0 +1,676 @@
+"""Unified model: every assigned architecture behind one interface.
+
+    model = Model(cfg)                       # cfg from repro.configs
+    params, specs = model.init(key)          # specs: logical-axis tree
+    logits, aux   = model.forward(params, batch)           # train
+    logits, cache = model.prefill(params, batch, cache)    # prefill
+    logits, cache = model.decode_step(params, token, cache)
+
+Families
+--------
+dense / vlm     pre-norm attn+FFN stack, scanned; gemma3's 5:1
+                local:global pattern is a scan over GROUPS of
+                (ratio x local + 1 global) so cache shapes stay uniform.
+moe             attn + (shared+routed experts); aux load-balance loss.
+ssm             mamba2 (SSD) stack.
+hybrid          mamba2 stack + ONE weight-tied attention block invoked
+                every `shared_attn_every` layers (zamba2).
+audio           whisper enc-dec: bidirectional encoder over stubbed frame
+                embeddings; causal decoder w/ cross-attention.
+vlm             dense decoder consuming [patch embeds | token embeds].
+
+All stacks scan over a stacked layer axis (HLO depth-independent);
+``remat=True`` wraps layer bodies in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import runtime as RT
+
+Params = Any
+
+
+def abstract_init(model: "Model", key=None):
+    """(ShapeDtypeStruct params, logical spec tree) with ZERO allocation.
+    Specs are static python data, captured by closure around eval_shape."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    captured = {}
+
+    def only_params(k):
+        p, s = model.init(k)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(only_params, key)
+    return shapes, captured["specs"]
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over layer keys -> params stacked on axis 0, and the
+    per-layer spec tree lifted with a leading None (layer) axis."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, spec = init_fn(key)
+    lifted = jax.tree.map(lambda lg: (None,) + lg, spec,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return params, lifted
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+
+    # ================================================================ init
+    def init(self, key) -> tuple[Params, Any]:
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 16))
+        params: dict = {}
+        specs: dict = {}
+
+        params["embed"], specs["embed"] = L.embed_init(next(ks), cfg)
+        params["final_norm"] = L.rmsnorm_init(cfg.d_model)
+        specs["final_norm"] = (None,)
+
+        t = cfg.arch_type
+        if t in ("dense", "vlm"):
+            if cfg.local_global_ratio:
+                r = cfg.local_global_ratio
+                gsize = r + 1
+                assert cfg.n_layers % gsize == 0
+                ng = cfg.n_layers // gsize
+
+                def group_init(k):
+                    k1, k2 = jax.random.split(k)
+                    loc, ls = _stack_init(
+                        lambda kk: self._dense_layer_init(kk), k1, r)
+                    glo, gs = self._dense_layer_init(k2)
+                    return {"local": loc, "global": glo}, \
+                           {"local": ls, "global": gs}
+                params["groups"], specs["groups"] = _stack_init(
+                    lambda k: group_init(k), next(ks), ng)
+            else:
+                params["layers"], specs["layers"] = _stack_init(
+                    lambda k: self._dense_layer_init(k), next(ks),
+                    cfg.n_layers)
+        elif t == "moe":
+            nd = cfg.first_k_dense
+            if nd:
+                params["dense_layers"], specs["dense_layers"] = _stack_init(
+                    lambda k: self._dense_layer_init(k), next(ks), nd)
+            params["layers"], specs["layers"] = _stack_init(
+                lambda k: self._moe_layer_init(k), next(ks),
+                cfg.n_layers - nd)
+        elif t == "ssm":
+            params["layers"], specs["layers"] = _stack_init(
+                lambda k: self._ssm_layer_init(k), next(ks), cfg.n_layers)
+        elif t == "hybrid":
+            params["layers"], specs["layers"] = _stack_init(
+                lambda k: self._ssm_layer_init(k), next(ks), cfg.n_layers)
+            params["shared_attn"], specs["shared_attn"] = \
+                self._dense_layer_init(next(ks))
+        elif t == "audio":
+            params["encoder"], specs["encoder"] = _stack_init(
+                lambda k: self._dense_layer_init(k, causal=False),
+                next(ks), cfg.encoder_layers)
+            params["layers"], specs["layers"] = _stack_init(
+                lambda k: self._dec_xattn_layer_init(k), next(ks),
+                cfg.n_layers)
+            params["enc_norm"] = L.rmsnorm_init(cfg.d_model)
+            specs["enc_norm"] = (None,)
+        else:
+            raise ValueError(t)
+        return params, specs
+
+    # ---- per-layer inits
+    def _dense_layer_init(self, key, causal=True):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        if cfg.attention == "mla":
+            attn, aspec = L.mla_init(k1, cfg)
+        else:
+            attn, aspec = L.gqa_init(k1, cfg)
+        ffn, fspec = L.ffn_init(k2, cfg)
+        p = {"attn": attn, "ffn": ffn,
+             "ln1": L.rmsnorm_init(cfg.d_model),
+             "ln2": L.rmsnorm_init(cfg.d_model)}
+        s = {"attn": aspec, "ffn": fspec, "ln1": (None,), "ln2": (None,)}
+        return p, s
+
+    def _moe_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        attn, aspec = L.gqa_init(k1, cfg)
+        moe, mspec = MOE.moe_init(k2, cfg)
+        p = {"attn": attn, "moe": moe,
+             "ln1": L.rmsnorm_init(cfg.d_model),
+             "ln2": L.rmsnorm_init(cfg.d_model)}
+        s = {"attn": aspec, "moe": mspec, "ln1": (None,), "ln2": (None,)}
+        return p, s
+
+    def _ssm_layer_init(self, key):
+        cfg = self.cfg
+        p, s = M.mamba2_init(key, cfg)
+        return {"mamba": p, "ln": L.rmsnorm_init(cfg.d_model)}, \
+               {"mamba": s, "ln": (None,)}
+
+    def _dec_xattn_layer_init(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        attn, aspec = L.gqa_init(k1, cfg)
+        xattn, xspec = L.gqa_init(k2, cfg)
+        ffn, fspec = L.ffn_init(k3, cfg)
+        p = {"attn": attn, "xattn": xattn, "ffn": ffn,
+             "ln1": L.rmsnorm_init(cfg.d_model),
+             "lnx": L.rmsnorm_init(cfg.d_model),
+             "ln2": L.rmsnorm_init(cfg.d_model)}
+        s = {"attn": aspec, "xattn": xspec, "ffn": fspec,
+             "ln1": (None,), "lnx": (None,), "ln2": (None,)}
+        return p, s
+
+    # ============================================================ forward
+    def forward(self, params: Params, batch: dict):
+        """Training forward: returns (logits (B,S,V), aux_loss scalar)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s_text = tokens.shape
+        h = L.embed_apply(params["embed"], tokens)
+        if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(h.dtype)
+            h = jnp.concatenate([ve, h], axis=1)
+        if cfg.rope_theta <= 0 and cfg.arch_type != "ssm":
+            h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model
+                                           ).astype(h.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                     (b, h.shape[1]))
+
+        enc_out = None
+        if cfg.arch_type == "audio":
+            enc_out = self._encode(params, batch["frames"])
+
+        h, aux = self._backbone(params, h, positions, enc_out=enc_out)
+        h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed_apply(params["embed"], h, cfg)
+        if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+            logits = logits[:, -s_text:]     # loss only on text positions
+        return logits, aux
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        h = frames.astype(L.ACT_DTYPE)
+        h = h + L.sinusoidal_positions(h.shape[1],
+                                       cfg.d_model).astype(h.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                     (h.shape[0], h.shape[1]))
+
+        def body(carry, lp):
+            x = carry
+            a, _ = L.gqa_apply(lp["attn"], L.rmsnorm(x, lp["ln1"]),
+                               cfg, positions=positions, causal=False)
+            x = x + a
+            x = x + L.ffn_apply(lp["ffn"], L.rmsnorm(x, lp["ln2"]), cfg)
+            return x, None
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        h, _ = RT.scan(body, h, params["encoder"])
+        return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    # -------------------------------------------------------- backbones
+    def _backbone(self, params, h, positions, *, enc_out=None,
+                  caches=None, update_cache=False, decode=False):
+        """Dispatch per family. Returns (h, aux) in train mode, or
+        (h, aux, new_caches) when caches is not None."""
+        cfg = self.cfg
+        t = cfg.arch_type
+        if t in ("dense", "vlm"):
+            if cfg.local_global_ratio:
+                out = self._dense_lg(params, h, positions, caches,
+                                     update_cache, decode)
+            else:
+                out = self._dense_stack(params, h, positions, caches,
+                                        update_cache, decode)
+        elif t == "moe":
+            out = self._moe_stack(params, h, positions, caches,
+                                  update_cache, decode)
+        elif t == "ssm":
+            out = self._ssm_stack(params, h, positions, caches,
+                                  update_cache, decode)
+        elif t == "hybrid":
+            out = self._hybrid_stack(params, h, positions, caches,
+                                     update_cache, decode)
+        elif t == "audio":
+            out = self._audio_stack(params, h, positions, enc_out, caches,
+                                    update_cache, decode)
+        else:
+            raise ValueError(t)
+        if caches is None:
+            h, aux = out
+            return h, aux
+        return out
+
+    def _attn_apply(self, lp, x, positions, *, window=0, cache=None,
+                    update_cache=False, causal=True):
+        cfg = self.cfg
+        xn = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            return L.mla_apply(lp["attn"], xn, cfg, positions=positions,
+                               cache=cache, update_cache=update_cache)
+        cache_pos = None
+        if cache is not None and window:
+            cache_pos = cache["len"] % window
+        return L.gqa_apply(lp["attn"], xn, cfg, positions=positions,
+                           causal=causal, window=window, cache=cache,
+                           cache_pos=cache_pos, update_cache=update_cache)
+
+    def _dense_layer(self, lp, x, positions, *, window=0, cache=None,
+                     update_cache=False):
+        a, new_cache = self._attn_apply(lp, x, positions, window=window,
+                                        cache=cache,
+                                        update_cache=update_cache)
+        x = x + a
+        x = x + L.ffn_apply(lp["ffn"], L.rmsnorm(x, lp["ln2"],
+                                                 self.cfg.norm_eps),
+                            self.cfg)
+        return x, new_cache
+
+    def _dense_stack(self, params, h, positions, caches, update_cache,
+                     decode):
+        def body(carry, xs):
+            x = carry
+            if caches is None:
+                x, _ = self._dense_layer(xs, x, positions)
+                return x, None
+            lp, cache = xs
+            x, nc = self._dense_layer(lp, x, positions, cache=cache,
+                                      update_cache=update_cache)
+            return x, nc
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            h, _ = RT.scan(body, h, params["layers"])
+            return h, jnp.zeros((), jnp.float32)
+        h, new_caches = RT.scan(body, h, (params["layers"], caches))
+        return h, jnp.zeros((), jnp.float32), new_caches
+
+    def _dense_lg(self, params, h, positions, caches, update_cache,
+                  decode):
+        """gemma3: groups of (ratio local + 1 global), scanned."""
+        cfg = self.cfg
+        r = cfg.local_global_ratio
+        w = cfg.sliding_window
+
+        def body(carry, xs):
+            x = carry
+            if caches is None:
+                gp = xs
+                for i in range(r):
+                    lp = jax.tree.map(lambda v: v[i], gp["local"])
+                    x, _ = self._dense_layer(lp, x, positions, window=w)
+                x, _ = self._dense_layer(gp["global"], x, positions)
+                return x, None
+            gp, gc = xs
+            new_loc = []
+            for i in range(r):
+                lp = jax.tree.map(lambda v: v[i], gp["local"])
+                lc = jax.tree.map(lambda v: v[i], gc["local"])
+                x, nc = self._dense_layer(lp, x, positions, window=w,
+                                          cache=lc,
+                                          update_cache=update_cache)
+                new_loc.append(nc)
+            x, ngc = self._dense_layer(gp["global"], x, positions,
+                                       cache=gc["global"],
+                                       update_cache=update_cache)
+            stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *new_loc)
+            return x, {"local": stacked, "global": ngc}
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            h, _ = RT.scan(body, h, params["groups"])
+            return h, jnp.zeros((), jnp.float32)
+        h, new_caches = RT.scan(body, h, (params["groups"], caches))
+        return h, jnp.zeros((), jnp.float32), new_caches
+
+    def _moe_stack(self, params, h, positions, caches, update_cache,
+                   decode):
+        cfg = self.cfg
+        nd = cfg.first_k_dense
+        aux_total = jnp.zeros((), jnp.float32)
+
+        # leading dense layers (unrolled; nd is 0 or 1 in our configs)
+        if nd:
+            dcaches = caches["dense"] if caches is not None else [None] * nd
+            new_dense = []
+            for i in range(nd):
+                lp = jax.tree.map(lambda v: v[i], params["dense_layers"])
+                c = jax.tree.map(lambda v: v[i], dcaches) \
+                    if caches is not None else None
+                h, nc = self._dense_layer(lp, h, positions, cache=c,
+                                          update_cache=update_cache)
+                new_dense.append(nc)
+
+        def body(carry, xs):
+            x, aux = carry
+            if caches is None:
+                lp, cache = xs, None
+            else:
+                lp, cache = xs
+            a, nc = self._attn_apply(lp, x, positions, cache=cache,
+                                     update_cache=update_cache)
+            x = x + a
+            mo, a_loss = MOE.moe_apply(
+                lp["moe"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+            x = x + mo
+            return (x, aux + a_loss), nc
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            (h, aux_total), _ = RT.scan(body, (h, aux_total),
+                                             params["layers"])
+            return h, aux_total
+        (h, aux_total), new_caches = RT.scan(
+            body, (h, aux_total), (params["layers"], caches["moe"]))
+        out_caches = {"moe": new_caches}
+        if nd:
+            out_caches["dense"] = jax.tree.map(lambda *vs: jnp.stack(vs),
+                                               *new_dense)
+        return h, aux_total, out_caches
+
+    def _ssm_layer(self, lp, x, *, cache=None, update_cache=False):
+        y, nc = M.mamba2_apply(lp["mamba"],
+                               L.rmsnorm(x, lp["ln"], self.cfg.norm_eps),
+                               self.cfg, cache=cache,
+                               update_cache=update_cache)
+        return x + y, nc
+
+    def _ssm_stack(self, params, h, positions, caches, update_cache,
+                   decode):
+        def body(carry, xs):
+            x = carry
+            if caches is None:
+                x, _ = self._ssm_layer(xs, x)
+                return x, None
+            lp, cache = xs
+            x, nc = self._ssm_layer(lp, x, cache=cache,
+                                    update_cache=update_cache)
+            return x, nc
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            h, _ = RT.scan(body, h, params["layers"])
+            return h, jnp.zeros((), jnp.float32)
+        h, new_caches = RT.scan(body, h, (params["layers"], caches))
+        return h, jnp.zeros((), jnp.float32), new_caches
+
+    def _hybrid_stack(self, params, h, positions, caches, update_cache,
+                      decode):
+        """zamba2: mamba stack; ONE shared attn block every k layers."""
+        cfg = self.cfg
+        k = cfg.shared_attn_every
+        nl = cfg.n_layers
+        is_attn = jnp.array([(i % k) == 0 for i in range(nl)])
+        attn_slot = jnp.array([i // k for i in range(nl)], jnp.int32)
+        shared = params["shared_attn"]
+
+        def apply_shared(x, attn_cache, slot):
+            if attn_cache is None:
+                y, _ = self._dense_layer(shared, x, positions)
+                return y, None
+            cache_l = jax.tree.map(
+                lambda v: jax.lax.dynamic_index_in_dim(v, slot, 0,
+                                                       keepdims=False),
+                attn_cache)
+            y, nc = self._dense_layer(shared, x, positions, cache=cache_l,
+                                      update_cache=update_cache)
+            new = jax.tree.map(
+                lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                    full, upd.astype(full.dtype), slot, 0),
+                attn_cache, nc)
+            return y, new
+
+        def body(carry, xs):
+            if caches is None:
+                x, _ = carry
+                lp, flag, slot = xs
+                x = jax.lax.cond(flag,
+                                 lambda v: apply_shared(v, None, slot)[0],
+                                 lambda v: v, x)
+                x, _ = self._ssm_layer(lp, x)
+                return (x, jnp.zeros((), jnp.int32)), None
+            x, attn_cache = carry
+            (lp, mcache), flag, slot = xs
+
+            def with_attn(args):
+                v, ac = args
+                return apply_shared(v, ac, slot)
+
+            x, attn_cache = jax.lax.cond(
+                flag, with_attn, lambda args: args, (x, attn_cache))
+            x, nmc = self._ssm_layer(lp, x, cache=mcache,
+                                     update_cache=update_cache)
+            return (x, attn_cache), nmc
+
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            (h, _), _ = RT.scan(
+                body, (h, jnp.zeros((), jnp.int32)),
+                (params["layers"], is_attn, attn_slot))
+            return h, jnp.zeros((), jnp.float32)
+        (h, new_attn), new_m = RT.scan(
+            body, (h, caches["attn"]),
+            ((params["layers"], caches["mamba"]), is_attn, attn_slot))
+        return h, jnp.zeros((), jnp.float32), \
+            {"attn": new_attn, "mamba": new_m}
+
+    def _audio_stack(self, params, h, positions, enc_out, caches,
+                     update_cache, decode):
+        cfg = self.cfg
+        enc_pos = None
+        if enc_out is not None:
+            enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1]),
+                                       (enc_out.shape[0],
+                                        enc_out.shape[1]))
+
+        def xattn(lp, x, kv_src, cache):
+            """Cross-attention; at decode, K/V come from the cache."""
+            xn = L.rmsnorm(x, lp["lnx"], cfg.norm_eps)
+            b, sq, _ = xn.shape
+            hh, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            p = lp["xattn"]
+            q = (xn.astype(L.ACT_DTYPE) @ p["wq"].astype(L.ACT_DTYPE)
+                 ).reshape(b, sq, hh, dh)
+            if kv_src is None:          # decode: K/V from the prefill cache
+                ck, cv = cache["k"], cache["v"]
+            else:                       # train/prefill: from encoder output
+                src = kv_src.astype(L.ACT_DTYPE)
+                ck = (src @ p["wk"].astype(L.ACT_DTYPE)).reshape(
+                    b, src.shape[1], hkv, dh)
+                cv = (src @ p["wv"].astype(L.ACT_DTYPE)).reshape(
+                    b, src.shape[1], hkv, dh)
+            out = L.full_attention(q, ck, cv, causal=False)
+            out = out.reshape(b, sq, hh * dh) @ p["wo"].astype(L.ACT_DTYPE)
+            return out.astype(x.dtype), {"k": ck, "v": cv}
+
+        def body(carry, xs):
+            x = carry
+            if caches is None:
+                lp, self_c, cross_c = xs, None, None
+            else:
+                lp, self_c, cross_c = xs
+            a, nsc = self._attn_apply(lp, x, positions, cache=self_c,
+                                      update_cache=update_cache)
+            x = x + a
+            xa, ncc = xattn(lp, x, enc_out, cross_c)
+            x = x + xa
+            x = x + L.ffn_apply(lp["ffn"],
+                                L.rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg)
+            if caches is None:
+                return x, None
+            return x, (nsc, ncc)
+        if self.remat:
+            body = RT.checkpoint_wrap(body)
+        if caches is None:
+            h, _ = RT.scan(body, h, params["layers"])
+            return h, jnp.zeros((), jnp.float32)
+        h, (new_self, new_cross) = RT.scan(
+            body, h, (params["layers"], caches["self"], caches["cross"]))
+        return h, jnp.zeros((), jnp.float32), \
+            {"self": new_self, "cross": new_cross}
+
+    # ========================================================== serving
+    def cache_init(self, batch: int, max_len: int) -> Any:
+        """Stacked (per-layer) cache pytrees for prefill/decode."""
+        cfg = self.cfg
+        t = cfg.arch_type
+
+        def stack(make, n):
+            return jax.tree.map(lambda *vs: jnp.stack(vs),
+                                *[make() for _ in range(n)])
+
+        if t in ("dense", "vlm"):
+            if cfg.attention == "mla":
+                return stack(lambda: L.mla_cache_init(cfg, batch, max_len),
+                             cfg.n_layers)
+            if cfg.local_global_ratio:
+                r = cfg.local_global_ratio
+                ng = cfg.n_layers // (r + 1)
+                return stack(
+                    lambda: {
+                        "local": stack(
+                            lambda: L.gqa_cache_init(
+                                cfg, batch, max_len,
+                                window=cfg.sliding_window), r),
+                        "global": L.gqa_cache_init(cfg, batch, max_len),
+                    }, ng)
+            return stack(lambda: L.gqa_cache_init(cfg, batch, max_len),
+                         cfg.n_layers)
+        if t == "moe":
+            nd = cfg.first_k_dense
+            out = {"moe": stack(
+                lambda: L.gqa_cache_init(cfg, batch, max_len),
+                cfg.n_layers - nd)}
+            if nd:
+                out["dense"] = stack(
+                    lambda: L.gqa_cache_init(cfg, batch, max_len), nd)
+            return out
+        if t == "ssm":
+            return stack(lambda: M.mamba2_cache_init(cfg, batch),
+                         cfg.n_layers)
+        if t == "hybrid":
+            n_attn = -(-cfg.n_layers // cfg.shared_attn_every)
+            return {
+                "mamba": stack(lambda: M.mamba2_cache_init(cfg, batch),
+                               cfg.n_layers),
+                "attn": stack(lambda: L.gqa_cache_init(cfg, batch,
+                                                       max_len), n_attn),
+            }
+        if t == "audio":
+            return {
+                "self": stack(lambda: L.gqa_cache_init(cfg, batch,
+                                                       max_len),
+                              cfg.n_layers),
+                "cross": stack(
+                    lambda: {"k": jnp.zeros((batch, cfg.encoder_frames,
+                                             cfg.n_kv_heads, cfg.d_head),
+                                            L.ACT_DTYPE),
+                             "v": jnp.zeros((batch, cfg.encoder_frames,
+                                             cfg.n_kv_heads, cfg.d_head),
+                                            L.ACT_DTYPE)},
+                    cfg.n_layers),
+            }
+        raise ValueError(t)
+
+    def cache_specs(self) -> Any:
+        """Logical-axis tree matching cache_init (leading layer axis)."""
+        cfg = self.cfg
+        t = cfg.arch_type
+        lift = lambda tree: jax.tree.map(
+            lambda lg: (None,) + lg, tree,
+            is_leaf=lambda x: isinstance(x, tuple))
+        if t in ("dense", "vlm"):
+            if cfg.attention == "mla":
+                return lift(L.mla_cache_specs())
+            if cfg.local_global_ratio:
+                return lift({"local": lift(L.gqa_cache_specs(window=True)),
+                             "global": L.gqa_cache_specs()})
+            return lift(L.gqa_cache_specs())
+        if t == "moe":
+            out = {"moe": lift(L.gqa_cache_specs())}
+            if cfg.first_k_dense:
+                out["dense"] = lift(L.gqa_cache_specs())
+            return out
+        if t == "ssm":
+            return lift(M.mamba2_cache_specs())
+        if t == "hybrid":
+            return {"mamba": lift(M.mamba2_cache_specs()),
+                    "attn": lift(L.gqa_cache_specs())}
+        if t == "audio":
+            return {"self": lift(L.gqa_cache_specs()),
+                    "cross": lift({"k": ("dp", None, None, None),
+                                   "v": ("dp", None, None, None)})}
+        raise ValueError(t)
+
+    def prefill(self, params, batch: dict, caches):
+        """Full-sequence forward writing caches; returns (last-position
+        logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        h = L.embed_apply(params["embed"], tokens)
+        if cfg.arch_type == "vlm" and "vision_embeds" in batch:
+            h = jnp.concatenate(
+                [batch["vision_embeds"].astype(h.dtype), h], axis=1)
+        if cfg.rope_theta <= 0 and cfg.arch_type != "ssm":
+            h = h + L.sinusoidal_positions(h.shape[1], cfg.d_model
+                                           ).astype(h.dtype)[None]
+        positions = jnp.broadcast_to(jnp.arange(h.shape[1]),
+                                     (b, h.shape[1]))
+        enc_out = None
+        if cfg.arch_type == "audio":
+            enc_out = self._encode(params, batch["frames"])
+        h, _, caches = self._backbone(params, h, positions,
+                                      enc_out=enc_out, caches=caches,
+                                      update_cache=True)
+        h = L.rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        return L.unembed_apply(params["embed"], h, cfg)[:, 0], caches
+
+    def decode_step(self, params, token, caches):
+        """One token (B,) + caches -> (logits (B,V), new caches)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        h = L.embed_apply(params["embed"], token[:, None])
+        pos_scalar = self._cache_len(caches)
+        positions = jnp.broadcast_to(pos_scalar[None, None], (b, 1))
+        if cfg.rope_theta <= 0 and cfg.arch_type != "ssm":
+            sin = L.sinusoidal_positions(1, cfg.d_model, offset=pos_scalar)
+            h = h + sin.astype(h.dtype)[None]
+        h, _, caches = self._backbone(params, h, positions, caches=caches,
+                                      update_cache=True, decode=True)
+        h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return L.unembed_apply(params["embed"], h, cfg)[:, 0], caches
+
+    def _cache_len(self, caches) -> jax.Array:
+        cfg = self.cfg
+        t = cfg.arch_type
+        if t in ("dense", "vlm"):
+            if cfg.local_global_ratio:
+                return caches["global"]["len"][0]
+            return caches["len"][0]
+        if t == "moe":
+            return caches["moe"]["len"][0]
+        if t == "hybrid":
+            return caches["attn"]["len"][0]
+        if t == "audio":
+            return caches["self"]["len"][0]
+        # pure ssm: track via a dedicated counter in conv cache? use zero
+        return jnp.zeros((), jnp.int32)

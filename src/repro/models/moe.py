@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: shared + routed experts, expert-parallel.
+
+Routing is the sort-based capacity dispatch (dropless up to
+``capacity_factor``): tokens are argsorted by expert id, packed into a
+dense (E, capacity, d) buffer via gather, processed with a grouped
+einsum whose expert axis is sharded over the mesh "expert"(=model) axis,
+and combined back with the router weights. Over-capacity tokens fall
+back to the shared-experts-only path (standard GShard-style dropping).
+
+This formulation has only static shapes (jit/vmap/scan-safe), and under
+pjit the pack/unpack gathers lower to the expected expert-parallel
+collectives (the all-to-all pattern of the dispatch).
+
+deepseek-moe: 2 shared + 64 routed top-6 (fine-grained experts).
+qwen2-moe:    4 shared + 60 routed top-4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import runtime as RT
+from repro.models.layers import ACT_DTYPE, dense_init
+
+Params = dict
+Specs = dict
+
+
+def moe_init(key, cfg: ModelConfig) -> tuple[Params, Specs]:
+    """Expert banks are padded to ``cfg.padded_experts`` (model-axis
+    multiple); the router only produces logits for the real experts, so
+    padded experts receive zero tokens (they exist purely for sharding)."""
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.padded_experts
+    ks = jax.random.split(key, 7)
+    out_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+
+    def expert_bank(k, n, fan_scale=0.02):
+        kk = jax.random.split(k, 3)
+        return {
+            "w_gate": 0.02 * jax.random.normal(kk[0], (n, d, f), jnp.float32),
+            "w_up": 0.02 * jax.random.normal(kk[1], (n, d, f), jnp.float32),
+            "w_down": out_scale * jax.random.normal(kk[2], (n, f, d),
+                                                    jnp.float32),
+        }
+
+    params = {
+        "router": dense_init(ks[0], d, cfg.n_experts, scale=0.006),
+        "experts": expert_bank(ks[1], e),
+    }
+    specs = {
+        "router": ("fsdp", None),
+        "experts": {"w_gate": ("expert", "fsdp", None),
+                    "w_up": ("expert", "fsdp", None),
+                    "w_down": ("expert", None, "fsdp")},
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        kk = jax.random.split(ks[2], 3)
+        params["shared"] = {
+            "w_gate": dense_init(kk[0], d, fs),
+            "w_up": dense_init(kk[1], d, fs),
+            "w_down": dense_init(kk[2], fs, d, scale=out_scale),
+        }
+        specs["shared"] = {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+                           "w_down": ("tp", "fsdp")}
+    return params, specs
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, min(cap, n_tokens))
+
+
+def _routed(xt, gate_w, gate_i, we, e: int, k: int, cap: int):
+    """Sort-based dispatch -> grouped expert matmul -> weighted combine.
+
+    xt (T, d); gate_w/gate_i (T, K). Returns (T, d). Static shapes only;
+    over-capacity routes drop to zero (shared experts still cover them).
+    """
+    t, d = xt.shape
+    flat_e = gate_i.reshape(-1)                            # (T*K,)
+    order = jnp.argsort(flat_e)                            # stable
+    sorted_e = flat_e[order]
+    token_of = order // k
+    # position within expert = rank in sorted order - expert start offset
+    counts = jnp.zeros((e,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # sentinel
+
+    # pack: buffer row -> source token index (T = zero-row sentinel)
+    buf_src = jnp.full((e * cap + 1,), t, jnp.int32).at[dest].set(
+        jnp.where(keep, token_of, t))[:e * cap]
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    xe = x_pad[buf_src].reshape(e, cap, d).astype(ACT_DTYPE)   # (E, C, d)
+    if RT.MOE_XE_SHARD:
+        # split the capacity rows over the data axes so expert compute
+        # parallelizes over dp too (dispatch becomes all-to-all-shaped
+        # redistribution instead of replicated compute)
+        from jax.sharding import PartitionSpec as P
+        xe = jax.lax.with_sharding_constraint(
+            xe, P("model", ("data",), None))
+
+    # ---- expert computation (E sharded over the mesh "expert" axis)
+    from repro.models.layers import wgather
+    wg = lambda w: wgather(w, ("expert", None, None)).astype(ACT_DTYPE)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg(we["w_gate"])))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wg(we["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, wg(we["w_down"]))
+    ye = ye.reshape(e * cap, d)
+
+    # ---- combine: scatter back through the same mapping
+    dest_unsorted = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        jnp.where(keep, dest, e * cap))
+    ye_pad = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], 0)
+    routed = ye_pad[dest_unsorted].reshape(t, k, d)        # dropped -> 0
+    return jnp.sum(routed * gate_w[..., None].astype(ye.dtype), axis=1)
+
+
+def moe_apply(p: Params, x, cfg: ModelConfig):
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.padded_experts, cfg.top_k
+    e_real = cfg.n_experts
+    xt = x.reshape(t, d)
+
+    # ---- router (f32 for numerics; only the REAL experts get logits)
+    logits = xt.astype(jnp.float32) @ p["router"]          # (T, E_real)
+    probs = jax.nn.softmax(logits, -1)
+    if e != e_real:  # pad prob columns with 0 so top_k never picks them
+        probs = jnp.pad(probs, ((0, 0), (0, e - e_real)))
+    gate_w, gate_i = jax.lax.top_k(probs, k)               # (T, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style)
+    me = probs.mean(0)                                     # (E,)
+    assign = jnp.zeros((e,), jnp.float32).at[gate_i.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e_real * jnp.sum(me * assign) * cfg.router_aux_coef
+
+    # ---- sort-based dispatch + expert compute + combine
+    if RT.MOE_GROUPED:
+        # GShard-style GROUPS: route within each batch row (dp-local), so
+        # pack/unpack gathers never cross the data axis — cross-mesh comm
+        # collapses to the expert-axis redistribution (all-to-all) instead
+        # of full-buffer all-reduces. Capacity is per group.
+        cap = _capacity(cfg, s)
+        xg = xt.reshape(b, s, d)
+        gw = gate_w.reshape(b, s, k)
+        gi = gate_i.reshape(b, s, k)
+        out = jax.vmap(
+            lambda xx, ww, ii: _routed(xx, ww, ii, p["experts"], e, k,
+                                       cap))(xg, gw, gi)
+        out = out.reshape(t, d)
+    else:
+        cap = _capacity(cfg, t)
+        out = _routed(xt, gate_w, gate_i, p["experts"], e, k, cap)
+
+    # ---- shared experts (always-on dense path)
+    if "shared" in p:
+        from repro.models.layers import wgather
+        sp = p["shared"]
+        xb = xt.astype(ACT_DTYPE)
+        wg = lambda w: wgather(w, ("fsdp", "tp")).astype(ACT_DTYPE)
+        hs = jax.nn.silu(xb @ wg(sp["w_gate"])) * (xb @ wg(sp["w_up"]))
+        out = out + hs @ wgather(sp["w_down"],
+                                 ("tp", "fsdp")).astype(ACT_DTYPE)
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,78 @@
+"""Runtime switches for model tracing.
+
+``UNROLL_SCANS``: when True, every layer/chunk scan lowers as an
+unrolled python loop instead of ``lax.scan``. XLA's cost_analysis counts
+a while-loop body ONCE (verified experimentally — a scan of 8 matmuls
+reports 1 matmul of FLOPs), so the roofline differential probe unrolls
+shallow-depth models to recover true per-layer costs. Production
+lowering keeps scans (compile time / HLO size), so this is only ever set
+by ``repro.roofline.differential``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL_SCANS = False
+
+# ---- §Perf hillclimb knobs (EXPERIMENTS.md) -------------------------------
+# Each defaults to the paper-faithful / naive-XLA baseline; the hillclimb
+# driver (repro.roofline.hillclimb) toggles them per variant.
+SCORES_BF16 = False        # store attention score tensors in bf16
+REMAT_POLICY = "full"      # full | dots (save matmul outputs) | none
+CHUNKED_THRESHOLD = 8192   # min seq for online-softmax chunked attention
+EMBED_ONEHOT = False       # vocab-parallel one-hot embedding lookup
+MOE_GROUPED = False        # GShard-style grouped (dp-local) MoE dispatch
+MICROBATCHES = 1           # gradient accumulation steps per train step
+SERVE_PURE_TP = False      # prefill/decode: params TP-only (no fsdp dim)
+WINDOW_CACHE_SP = False    # shard sliding-window KV caches on seq (model)
+GATHER_WEIGHTS = False     # train: force weight all-gather over activation
+                           # all-reduce for fsdp-sharded contractions
+MOE_XE_SHARD = False       # shard MoE dispatch buffers (E->model, cap->dp)
+                           # so expert compute splits over dp instead of
+                           # replicating (all-to-all dispatch)
+MLA_PAD_HEADS = False      # pad MLA head count to the model-axis multiple
+                           # (16): non-divisible heads (minicpm3: 40) make
+                           # XLA replicate the batch and all-reduce 86 GB
+                           # score tensors; dummy heads have zero wo rows
+                           # (function-identical at init, +20% attn flops)
+
+
+def set_unroll(v: bool) -> None:
+    global UNROLL_SCANS
+    UNROLL_SCANS = v
+
+
+def set_flags(**kw) -> None:
+    g = globals()
+    for k, v in kw.items():
+        key = k.upper()
+        assert key in g, key
+        g[key] = v
+
+
+def checkpoint_wrap(body):
+    import jax as _jax
+    if REMAT_POLICY == "none":
+        return body
+    if REMAT_POLICY == "dots":
+        return _jax.checkpoint(
+            body,
+            policy=_jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return _jax.checkpoint(body)
+
+
+def scan(body, carry, xs):
+    """lax.scan, or an unrolled equivalent under UNROLL_SCANS."""
+    if not UNROLL_SCANS:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda v: v[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *v: jnp.stack(v), *ys)
+    return carry, stacked

@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Depth-differential roofline probe.
+
+XLA ``cost_analysis`` (and the HLO collective scan) count a
+``lax.scan`` body ONCE, not per trip — so full-depth dry-run costs
+undercount by ~n_layers. This probe compiles each (arch x shape) at two
+shallow depths (L1, L2), recovers
+
+    per_layer = (C(L2) - C(L1)) / (L2 - L1)
+    total(L)  = C(L1) + per_layer * (L - L1)
+
+for FLOPs, bytes accessed, and per-kind collective bytes, and writes the
+corrected totals to JSONL for the report. Depth pairs respect each
+family's structural period (gemma3 local:global groups of 6, zamba2
+shared-attn period 6, deepseek-moe leading dense layer).
+
+    PYTHONPATH=src python -m repro.roofline.differential \
+        [--arch X --shape Y] [--multi-pod] [--out results/diff.jsonl]
+"""
+import argparse
+import json
+import sys
+import traceback
+
+from repro.configs.base import ARCH_NAMES, INPUT_SHAPES, get_config
+
+# (L1, L2) per arch — respecting structural periodicity
+DEPTH_PAIRS = {
+    "phi3_vision_4p2b": (4, 8),
+    "mamba2_780m": (4, 8),
+    "phi4_mini_3p8b": (4, 8),
+    "gemma3_12b": (6, 12),
+    "deepseek_moe_16b": (5, 9),
+    "minicpm3_4b": (4, 8),
+    "whisper_medium": (4, 8),
+    "zamba2_1p2b": (6, 12),
+    "qwen2_moe_a2p7b": (4, 8),
+    "deepseek_67b": (4, 8),
+}
+
+
+def _extract(res: dict) -> dict:
+    c = dict(res["cost"])
+    c["collective_total"] = res["collectives"]["total_bytes"]
+    for k, v in res["collectives"]["per_kind_bytes"].items():
+        c[f"coll_{k}"] = v
+    return c
+
+
+def probe(arch: str, shape: str, *, multi_pod: bool) -> dict:
+    from repro.launch.dryrun import lower_combo
+    from repro.models import runtime as RT
+    RT.set_unroll(True)   # scans lower as unrolled loops: true per-layer cost
+    cfg = get_config(arch)
+    l1, l2 = DEPTH_PAIRS[arch]
+    r1 = lower_combo(arch, shape, multi_pod=multi_pod, n_layers=l1)
+    if r1["status"] != "ok":
+        return r1
+    r2 = lower_combo(arch, shape, multi_pod=multi_pod, n_layers=l2)
+    c1, c2 = _extract(r1), _extract(r2)
+    full = {}
+    for k in c1:
+        per = (c2[k] - c1[k]) / (l2 - l1)
+        full[k] = c1[k] + per * (cfg.n_layers - l1)
+        full[f"per_layer_{k}"] = per
+    return {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok", "n_devices": r1["n_devices"],
+        "depth_pair": [l1, l2],
+        "corrected": full,
+        "shallow_flops": [c1["flops"], c2["flops"]],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    combos = ([(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    out_f = open(args.out, "a") if args.out else None
+    fails = 0
+    for arch, shape in combos:
+        try:
+            res = probe(arch, shape, multi_pod=args.multi_pod)
+            st = res["status"]
+            if st == "ok":
+                print(f"OK   {arch} x {shape}: corrected flops/dev = "
+                      f"{res['corrected']['flops']:.3e} "
+                      f"coll = {res['corrected']['collective_total']:.3e}B",
+                      flush=True)
+            else:
+                print(f"SKIP {arch} x {shape}: {st}", flush=True)
+        except Exception as e:
+            fails += 1
+            res = {"arch": arch, "shape": shape,
+                   "status": f"FAIL: {type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+            print(f"FAIL {arch} x {shape}: {e}", flush=True)
+        if out_f:
+            out_f.write(json.dumps(res) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Collective attribution: top-N largest collectives in a compiled combo,
+with their op_name metadata (maps each collective back to model source).
+
+    PYTHONPATH=src python -m repro.roofline.inspect_hlo \
+        --arch gemma3_12b --shape decode_32k [--variant onehot_embed]
+"""
+import argparse
+import re
+import sys
+
+from repro.roofline.collect import _COLL_LINE, _shape_bytes
+
+
+def top_collectives(hlo: str, n=15):
+    out = []
+    for m in _COLL_LINE.finditer(hlo):
+        if "-done(" in m.group(0):
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        line = hlo[m.start():hlo.find("\n", m.start())]
+        meta = re.search(r'op_name="([^"]+)"', line)
+        out.append((b, kind, shape_str[:60],
+                    meta.group(1)[-120:] if meta else "?"))
+    out.sort(reverse=True)
+    return out[:n]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--n-layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.models import runtime as RT
+    from repro.roofline.hillclimb import VARIANTS
+    RT.set_flags(**VARIANTS[args.variant])
+    if args.unroll:
+        RT.set_unroll(True)
+
+    # lower at shallow depth for a readable unrolled module
+    from repro.launch import dryrun as DR
+    import jax
+    from repro.configs.base import get_config, INPUT_SHAPES, supports_shape
+
+    nl = args.n_layers or 2
+    r = DR.lower_combo(args.arch, args.shape, multi_pod=False,
+                       n_layers=nl, keep_hlo=True)
+    print(f"{args.arch} x {args.shape} [{args.variant}] depth={nl} "
+          f"unroll={args.unroll}")
+    print(f"total collective bytes: {r['collectives']['total_bytes']:.3e}")
+    for b, kind, shape, name in top_collectives(r["_hlo"]):
+        print(f"  {b / 1e6:10.2f} MB  {kind:19s} {shape:40s} {name}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

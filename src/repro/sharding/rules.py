@@ -1,0 +1,69 @@
+"""Logical-axis sharding rules -> PartitionSpec.
+
+Params and activations are annotated with LOGICAL axis names; a rules
+table maps them onto physical mesh axes at launch time. Production
+layout is 2-D: "fsdp" (ZeRO-3-style weight sharding over the data axes,
+gathered on use) x "tp" (Megatron-style tensor parallelism over the
+model axis). MoE experts ride the model axis ("expert").
+
+  fsdp   -> ("pod", "data")  [multi-pod]  /  ("data",)  [single pod]
+  tp     -> ("model",)
+  expert -> ("model",)
+  dp     -> batch axis of activations, ("pod", "data")
+  sp     -> sequence sharding for giant decode KV caches
+  None   -> replicated
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def rules_for(mesh: Optional[Mesh], *, serve_pure_tp: bool = False) -> dict:
+    if mesh is None:  # smoke tests: single device, everything replicated
+        return {"fsdp": None, "tp": None, "expert": None, "dp": None,
+                "sp": None, None: None}
+    dp = dp_axes(mesh)
+    return {
+        # inference: weights stay TP-resident; an fsdp(-sharded) weight
+        # contraction makes XLA all-reduce full activations (measured:
+        # 5.7 GB/layer on deepseek-moe prefill) instead of gathering the
+        # 90 MB weight — pure TP removes that entire class of traffic
+        "fsdp": None if serve_pure_tp else (dp if dp else None),
+        "tp": "model" if "model" in mesh.axis_names else None,
+        "expert": "model" if "model" in mesh.axis_names else None,
+        "dp": dp if dp else None,
+        "sp": "model" if "model" in mesh.axis_names else None,
+        None: None,
+    }
+
+
+def spec(logical: tuple, mesh: Optional[Mesh], *,
+         serve_pure_tp: bool = False) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec."""
+    r = rules_for(mesh, serve_pure_tp=serve_pure_tp)
+    return P(*[r[name] for name in logical])
+
+
+def tree_specs(logical_tree: Any, mesh: Optional[Mesh]) -> Any:
+    """Map a pytree of logical tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(lambda lg: spec(lg, mesh), logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_shardings(logical_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(logical_tree, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def divisible(n: int, mesh: Optional[Mesh], axis: str) -> bool:
+    if mesh is None or axis not in mesh.axis_names:
+        return True
+    return n % mesh.shape[axis] == 0

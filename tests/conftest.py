@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run forces 512 devices in its OWN
+# process only). Keep CPU determinism reasonable.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,56 @@
+"""Dry-run launch-path integration: lower+compile a reduced combo on a
+small forced-device mesh in a subprocess (the real 512-device sweep is
+results/dryrun_*.jsonl; this keeps the path covered in CI)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.base import get_config, reduced, INPUT_SHAPES
+    from repro.models.model import Model, abstract_init
+    from repro.sharding import rules
+    from repro.roofline.collect import collective_bytes
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = reduced(get_config("%s"))
+    model = Model(cfg)
+    params_shapes, logical = abstract_init(model)
+    shardings = jax.tree.map(
+        lambda lg: NamedSharding(mesh, rules.spec(lg, mesh)),
+        logical, is_leaf=lambda x: isinstance(x, tuple))
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (4, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (4, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+
+    def fwd(p, b):
+        return model.forward(p, b)[0]
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fwd).lower(params_shapes, batch)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    coll = collective_bytes(compiled.as_text())
+    print("DRYRUN_OK", coll["total_bytes"])
+""")
+
+
+@pytest.mark.parametrize("arch", ["phi4_mini_3p8b", "qwen2_moe_a2p7b",
+                                  "mamba2_780m"])
+def test_reduced_dryrun_on_2x4_mesh(arch):
+    r = subprocess.run([sys.executable, "-c", _SCRIPT % arch],
+                       capture_output=True, text=True, cwd=".",
+                       timeout=600)
+    assert "DRYRUN_OK" in r.stdout, r.stdout[-500:] + r.stderr[-2000:]

@@ -1,0 +1,134 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import kernels as K, ovo, smo
+from repro.kernels import ops, ref
+from repro.models import layers as L
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# -------------------------------------------------------------- SVM core
+
+@st.composite
+def dataset(draw, max_n=60, max_d=8):
+    n = draw(st.integers(8, max_n))
+    d = draw(st.integers(1, max_d))
+    x = draw(hnp.arrays(np.float32, (n, d),
+                        elements=st.floats(-5, 5, width=32)))
+    y = draw(hnp.arrays(np.int8, (n,), elements=st.sampled_from([0, 1])))
+    # ensure both classes present
+    y = np.asarray(y, np.int8)
+    y[0], y[1] = 0, 1
+    return x, np.where(y == 0, 1.0, -1.0).astype(np.float32)
+
+
+@given(dataset())
+@settings(**SET)
+def test_smo_invariants(data):
+    """For ANY dataset: solver terminates with 0 <= alpha <= C,
+    sum(alpha*y) ~ 0, and alphas of duplicated-at-bounds stay in box."""
+    x, y = data
+    kp = K.KernelParams(gamma=0.5)
+    r = smo.binary_smo(jnp.asarray(x), jnp.asarray(y),
+                       cfg=smo.SMOConfig(C=1.0, max_iter=20_000),
+                       kernel=kp)
+    alpha = np.asarray(r.alpha)
+    assert np.all(alpha >= 0.0) and np.all(alpha <= 1.0 + 1e-6)
+    assert abs(float(np.sum(alpha * y))) < 1e-3
+    assert np.all(np.isfinite(np.asarray(r.b)))
+
+
+@given(dataset(max_n=40))
+@settings(**SET)
+def test_gram_psd_and_symmetric(data):
+    """RBF Gram must be symmetric with diag 1 and be PSD (+eps)."""
+    x, _ = data
+    g = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.3))
+    np.testing.assert_allclose(g, g.T, atol=1e-5)
+    np.testing.assert_allclose(np.diag(g), 1.0, atol=1e-5)
+    w = np.linalg.eigvalsh(g + 1e-4 * np.eye(len(g)))
+    assert w.min() > -1e-3
+
+
+@given(dataset(max_n=48, max_d=6))
+@settings(**SET)
+def test_pallas_gram_matches_oracle(data):
+    x, _ = data
+    got = np.asarray(ops.rbf_gram(jnp.asarray(x), jnp.asarray(x),
+                                  gamma=0.7))
+    want = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.7))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+
+@given(st.integers(2, 7), st.integers(3, 25))
+@settings(**SET)
+def test_ovo_task_count_and_coverage(m, n_per):
+    """C = m(m-1)/2 tasks; every sample appears in exactly m-1 tasks."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(m * n_per, 3)).astype(np.float32)
+    y = np.repeat(np.arange(m), n_per)
+    tasks = ovo.build_tasks(x, y)
+    assert tasks.x.shape[0] == m * (m - 1) // 2
+    assert int(tasks.mask.sum()) == (m - 1) * m * n_per
+
+
+# ------------------------------------------------------------ model layers
+
+@given(st.integers(1, 8), st.integers(1, 3))
+@settings(**SET)
+def test_rope_preserves_norm(s, b):
+    """Rotary embedding is an isometry per 2-plane."""
+    rng = np.random.default_rng(s)
+    x = rng.normal(size=(b, s, 2, 16)).astype(np.float32)
+    pos = np.tile(np.arange(s)[None], (b, 1))
+    out = L.rope(jnp.asarray(x), jnp.asarray(pos), 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=2e-4)
+
+
+@given(st.integers(0, 10_000))
+@settings(**SET)
+def test_rmsnorm_scale_invariant_direction(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(2, 3, 8)).astype(np.float32) + 0.1
+    w = np.zeros(8, np.float32)
+    a = np.asarray(L.rmsnorm(jnp.asarray(x), jnp.asarray(w)))
+    b = np.asarray(L.rmsnorm(jnp.asarray(3.7 * x), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+    # unit RMS out
+    rms = np.sqrt((a ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=2e-2)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_softmax_attention_rows_sum_to_one_effect(seed):
+    """full_attention of constant V returns that constant (weights sum 1)."""
+    rng = np.random.default_rng(seed)
+    b, s, h, d = 1, 6, 2, 8
+    q = rng.normal(size=(b, s, h, d)).astype(np.float32)
+    k = rng.normal(size=(b, s, h, d)).astype(np.float32)
+    v = np.ones((b, s, h, d), np.float32) * 0.7
+    out = np.asarray(L.full_attention(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v)))
+    np.testing.assert_allclose(out, 0.7, rtol=2e-3)
+
+
+def test_moe_combine_conserves_weights():
+    """Routing all-ones through identity-ish experts: the combine weights
+    per token must sum to ~1 (dropless within capacity)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import moe as MOE
+    cfg = reduced(get_config("qwen2_moe_a2p7b"))
+    p, _ = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(b, s, cfg.d_model)).astype(np.float32))
+    out, aux = MOE.moe_apply(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux))

@@ -1,0 +1,119 @@
+"""End-to-end behaviour tests: the paper's pipeline and the LM driver."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.svm import SVC
+from repro.data import (load_breast_cancer_like, load_iris,
+                        load_pavia_like, normalize, train_test_split)
+from repro.data.pipeline import subsample_per_class
+
+
+class TestPaperPipeline:
+    """The paper's three dataset scenarios, end to end (accuracy checks —
+    the TIME comparison lives in benchmarks/)."""
+
+    def test_iris_binary_both_solvers(self):
+        # paper Table V: Iris 40 points / 4 features / 2 classes
+        x, y = load_iris()
+        x = normalize(x)
+        xs, ys = subsample_per_class(x[y != 2], y[y != 2], 20, seed=0)
+        for solver in ("smo", "gd"):
+            clf = SVC(solver=solver, gd_steps=2000).fit(xs, ys)
+            assert clf.score(xs, ys) >= 0.95, solver
+
+    def test_breast_cancer_binary(self):
+        # paper Table V: 190 points / 32 features / 2 classes
+        x, y = load_breast_cancer_like()
+        x = normalize(x)
+        xs, ys = subsample_per_class(x, y, 95, seed=0)
+        clf = SVC(solver="smo").fit(xs, ys)
+        assert clf.score(xs, ys) >= 0.9
+
+    def test_pavia_multiclass_9(self):
+        # paper Table IV: 9-class one-vs-one
+        x, y = load_pavia_like(n_per_class=30)
+        x = normalize(x)
+        xtr, ytr, xte, yte = train_test_split(x, y, test_frac=0.25, seed=1)
+        clf = SVC(solver="smo").fit(xtr, ytr)
+        assert clf.score(xte, yte) >= 0.95
+        assert clf.converged_
+
+    def test_generalization_train_test(self):
+        x, y = load_iris()
+        x = normalize(x)
+        xtr, ytr, xte, yte = train_test_split(x, y, test_frac=0.2, seed=0)
+        clf = SVC(solver="smo").fit(xtr, ytr)
+        assert clf.score(xte, yte) >= 0.9
+
+
+class TestLMTraining:
+    def test_reduced_lm_loss_decreases(self):
+        """A reduced mamba2 trains on the synthetic stream and the loss
+        moves down within 30 steps (end-to-end driver sanity)."""
+        from repro.configs.base import get_config, reduced
+        from repro.data.lm import token_batches
+        from repro.models.model import Model
+        from repro.optim.adamw import AdamW
+        from repro.training.train import make_train_step
+
+        cfg = reduced(get_config("mamba2_780m"))
+        model = Model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(lr=3e-3)
+        state = opt.init(params)
+        step = jax.jit(make_train_step(model, opt))
+        losses = []
+        for nb in token_batches(vocab_size=cfg.vocab_size, batch=4,
+                                seq_len=64, n_batches=30, seed=0):
+            batch = {k: jnp.asarray(v) for k, v in nb.items()}
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+    def test_checkpoint_roundtrip_with_model(self, tmp_path):
+        from repro.checkpoint import ckpt as CK
+        from repro.configs.base import get_config, reduced
+        from repro.models.model import Model
+
+        cfg = reduced(get_config("phi4_mini_3p8b"))
+        model = Model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        path = str(tmp_path / "m.npz")
+        CK.save(path, params, step=1)
+        restored = CK.restore(path, params)
+        batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+        a, _ = model.forward(params, batch)
+        b, _ = model.forward(restored, batch)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestSVMOnEmbeddings:
+    def test_svm_head_on_backbone_features(self):
+        """The integration scenario from DESIGN.md: OvO-SVM trained on
+        pooled transformer hidden states separates synthetic 'domains'."""
+        from repro.configs.base import get_config, reduced
+        from repro.models.model import Model
+        from repro.models import layers as L
+
+        cfg = reduced(get_config("phi4_mini_3p8b"))
+        model = Model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        # three synthetic token "domains" (disjoint vocab ranges)
+        feats, labels = [], []
+        fwd = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+        for c in range(3):
+            lo = c * (cfg.vocab_size // 3)
+            toks = rng.integers(lo, lo + cfg.vocab_size // 3,
+                                (12, 16)).astype(np.int32)
+            # mean-pooled final hidden state proxy: logits pooled
+            lg = np.asarray(fwd(params, jnp.asarray(toks)),
+                            np.float32).mean(axis=1)
+            feats.append(lg[:, :256])
+            labels.append(np.full(12, c))
+        x = normalize(np.concatenate(feats))
+        y = np.concatenate(labels)
+        clf = SVC(solver="smo", C=10.0).fit(x, y)
+        assert clf.score(x, y) >= 0.9

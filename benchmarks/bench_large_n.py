@@ -1,0 +1,89 @@
+"""Large-n training trajectory: the chunked KernelEngine past the dense
+memory wall.
+
+Sweeps n over {2k, 8k, 16k, 32k} binary RBF problems with the chunked +
+adaptive-shrinking engine (LRU row cache, WSS2 selection) and emits one
+JSON line per point via ``benchmarks.common.emit_json``:
+
+    {"bench": "large_n", "n": 16384, "backend": "chunked",
+     "wall_s": ..., "n_iter": ..., "converged": ..., "n_sv": ...,
+     "mem_mode": "chunked", "gram_bytes_dense": ..., "peak_gram_bytes": ...}
+
+``gram_bytes_dense`` is what the full-Gram path would need (n^2 * 4);
+``peak_gram_bytes`` is the chunked engine's actual resident kernel state
+(chunk*n matvec stripe + cache_slots*n LRU rows). Future PRs diff this
+trajectory for regressions as the scaling work proceeds.
+
+    PYTHONPATH=src python -m benchmarks.bench_large_n [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_json
+from repro.core import kernel_engine as KE
+from repro.core import kernels as K, smo
+from repro.data import make_blobs, normalize
+
+SIZES = (2048, 8192, 16384, 32768)
+CACHE_SLOTS = 16
+CHUNK = 2048
+
+
+def _problem(n: int, d: int = 8, seed: int = 7):
+    x, y = make_blobs(n // 2, 2, d, sep=4.0, seed=seed)
+    yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+    return normalize(x), yy
+
+
+def bench_one(n: int) -> dict:
+    x, yy = _problem(n)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    ecfg = KE.EngineConfig(backend="chunked", cache_slots=CACHE_SLOTS,
+                           chunk=CHUNK)
+    cfg = smo.SMOConfig(max_iter=60_000, shrink_every=4,
+                        selection="second")
+    fit = jax.jit(lambda a, b: smo.binary_smo(a, b, cfg=cfg, kernel=kp,
+                                              engine=ecfg))
+    xj, yj = jnp.asarray(x), jnp.asarray(yy)
+    r = fit(xj, yj)          # warmup includes compile
+    jax.block_until_ready(r.alpha)
+    t0 = time.perf_counter()
+    r = fit(xj, yj)
+    jax.block_until_ready(r.alpha)
+    wall = time.perf_counter() - t0
+    chunk = min(CHUNK, n)
+    return {
+        "bench": "large_n",
+        "n": n,
+        "backend": ecfg.backend,
+        "selection": cfg.selection,
+        "shrink_every": cfg.shrink_every,
+        "wall_s": round(wall, 3),
+        "n_iter": int(r.n_iter),
+        "converged": bool(r.converged),
+        "gap": float(r.gap),
+        "n_sv": int((np.asarray(r.alpha) > 1e-8).sum()),
+        "mem_mode": "chunked",
+        "gram_bytes_dense": 4 * n * n,
+        "peak_gram_bytes": 4 * n * (chunk + CACHE_SLOTS),
+    }
+
+
+def main(quick: bool = False) -> None:
+    sizes = SIZES[:2] if quick else SIZES
+    for n in sizes:
+        emit_json(bench_one(n))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="only the two smallest sizes")
+    args = ap.parse_args()
+    main(quick=args.quick)

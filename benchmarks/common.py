@@ -1,6 +1,7 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV/JSON emission."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable
 
@@ -22,3 +23,9 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def emit_json(record: dict) -> None:
+    """One JSON object per line (machine-consumable trajectory points —
+    future PRs diff these across commits)."""
+    print(json.dumps(record, sort_keys=True), flush=True)

@@ -7,6 +7,8 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
   Table IV      -> bench_multiclass  (9-class OvO parallel vs sequential)
   Table VI      -> bench_portability (same program jit vs eager)
   kernels       -> bench_kernels     (hot-spot roofline estimates)
+  beyond-paper  -> bench_large_n     (chunked-engine large-n trajectory,
+                                      JSON lines; --only large_n)
 """
 from __future__ import annotations
 
@@ -25,8 +27,8 @@ def main(argv=None) -> None:
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
 
-    from benchmarks import (bench_binary, bench_kernels, bench_multiclass,
-                            bench_portability)
+    from benchmarks import (bench_binary, bench_kernels, bench_large_n,
+                            bench_multiclass, bench_portability)
     if args.quick:
         bench_binary.GD_STEPS = 300
         bench_multiclass.GD_STEPS = 300
@@ -41,6 +43,9 @@ def main(argv=None) -> None:
         bench_portability.main()
     if only is None or "kernels" in only:
         bench_kernels.main()
+    if only is not None and "large_n" in only:
+        # opt-in: minutes-long at full size (JSON lines, not CSV)
+        bench_large_n.main(quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.kernel_engine import (ChunkedKernelEngine,  # noqa: F401
+                                      DenseKernelEngine, EngineConfig,
+                                      KernelEngine, PallasKernelEngine,
+                                      make_engine)

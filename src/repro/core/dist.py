@@ -17,6 +17,11 @@ JAX-native mapping:
 ``sequential_ovo_fit`` is the "Multi-Tensorflow" side: one GD session per
 task, executed one after another (the paper runs multiple TF sessions
 sequentially).
+
+Every fit entry point threads an optional ``engine`` (an ``EngineConfig``
+or backend name from ``repro.core.kernel_engine``) down to the binary
+solvers, so the per-task Gram strategy — dense, chunked + LRU row cache,
+or Pallas-tiled — is chosen once at the top.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import gd as gd_mod
+from repro.core import kernel_engine as KE
 from repro.core import kernels as K
 from repro.core import smo as smo_mod
 from repro.core.ovo import OvOTasks
@@ -40,6 +46,33 @@ except AttributeError:  # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map  # type: ignore
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: the replication-check kwarg was renamed
+    (``check_rep`` on jax 0.4/0.5, ``check_vma`` on jax >= 0.6); calling
+    with the wrong one is a TypeError, which on the old kwarg silently
+    broke the whole distributed path."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+def _batched_engine(engine):
+    """Strip the LRU row cache for vmapped/sharded dispatch: a batched
+    ``lax.cond`` executes both branches, so a cache lookup recomputes the
+    kernel row regardless of hit while still paying the (slots, n)
+    buffer scatter per task — strictly worse than no cache."""
+    if engine is None:
+        return None
+    if isinstance(engine, str):
+        engine = KE.EngineConfig(backend=engine)
+    if isinstance(engine, KE.EngineConfig) and engine.cache_slots:
+        return dataclasses.replace(engine, cache_slots=0)
+    return engine
+
+
 class OvOFit(NamedTuple):
     alpha: jax.Array      # (C, n_task)
     b: jax.Array          # (C,)
@@ -48,18 +81,24 @@ class OvOFit(NamedTuple):
 
 
 def _fit_many_smo(x, y, mask, *, cfg: smo_mod.SMOConfig,
-                  kernel: K.KernelParams) -> OvOFit:
+                  kernel: K.KernelParams,
+                  engine: Optional[KE.EngineConfig | str] = None) -> OvOFit:
     """vmap of the binary solver over a stacked task axis."""
+    engine = _batched_engine(engine)
+
     def one(xt, yt, mt):
-        r = smo_mod.binary_smo(xt, yt, mt, cfg=cfg, kernel=kernel)
+        r = smo_mod.binary_smo(xt, yt, mt, cfg=cfg, kernel=kernel,
+                               engine=engine)
         return OvOFit(r.alpha, r.b, r.n_iter, r.converged)
     return jax.vmap(one)(x, y, mask)
 
 
 def _fit_many_gd(x, y, mask, *, cfg: gd_mod.GDConfig,
-                 kernel: K.KernelParams) -> OvOFit:
+                 kernel: K.KernelParams,
+                 engine: Optional[KE.EngineConfig | str] = None) -> OvOFit:
     def one(xt, yt, mt):
-        r = gd_mod.binary_gd(xt, yt, mt, cfg=cfg, kernel=kernel)
+        r = gd_mod.binary_gd(xt, yt, mt, cfg=cfg, kernel=kernel,
+                             engine=engine)
         return OvOFit(r.alpha, r.b, r.n_iter,
                       jnp.asarray(True))
     return jax.vmap(one)(x, y, mask)
@@ -72,7 +111,9 @@ def distributed_ovo_fit(tasks: OvOTasks,
                         solver: str = "smo",
                         smo_cfg: smo_mod.SMOConfig = smo_mod.SMOConfig(),
                         gd_cfg: gd_mod.GDConfig = gd_mod.GDConfig(),
-                        kernel: K.KernelParams = K.KernelParams()) -> OvOFit:
+                        kernel: K.KernelParams = K.KernelParams(),
+                        engine: Optional[KE.EngineConfig | str] = None
+                        ) -> OvOFit:
     """Fit all OvO tasks, task axis sharded over ``worker_axes`` of ``mesh``.
 
     The task axis length must be divisible by the total worker count
@@ -86,17 +127,18 @@ def distributed_ovo_fit(tasks: OvOTasks,
             f"build tasks with pad_tasks_to={n_workers}")
 
     if solver == "smo":
-        fit_local = partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel)
+        fit_local = partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel,
+                            engine=engine)
     elif solver == "gd":
-        fit_local = partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel)
+        fit_local = partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel,
+                            engine=engine)
     else:
         raise ValueError(f"unknown solver {solver!r}")
 
     spec = P(worker_axes)
-    fit = shard_map(fit_local, mesh=mesh,
-                    in_specs=(spec, spec, spec),
-                    out_specs=OvOFit(spec, spec, spec, spec),
-                    check_vma=False)
+    fit = _shard_map(fit_local, mesh,
+                     (spec, spec, spec),
+                     OvOFit(spec, spec, spec, spec))
     fit = jax.jit(fit)
 
     sh = NamedSharding(mesh, spec)
@@ -109,40 +151,49 @@ def distributed_ovo_fit(tasks: OvOTasks,
 def vmapped_ovo_fit(tasks: OvOTasks, *, solver: str = "smo",
                     smo_cfg: smo_mod.SMOConfig = smo_mod.SMOConfig(),
                     gd_cfg: gd_mod.GDConfig = gd_mod.GDConfig(),
-                    kernel: K.KernelParams = K.KernelParams()) -> OvOFit:
+                    kernel: K.KernelParams = K.KernelParams(),
+                    engine: Optional[KE.EngineConfig | str] = None
+                    ) -> OvOFit:
     """Single-device stacked fit (no mesh) — the CUDA-only configuration."""
     x, y, mask = (jnp.asarray(tasks.x), jnp.asarray(tasks.y),
                   jnp.asarray(tasks.mask))
     if solver == "smo":
-        return jax.jit(partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel))(
-            x, y, mask)
-    return jax.jit(partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel))(
-        x, y, mask)
+        return jax.jit(partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel,
+                               engine=engine))(x, y, mask)
+    return jax.jit(partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel,
+                           engine=engine))(x, y, mask)
 
 
 def sequential_ovo_fit(tasks: OvOTasks, *, solver: str = "gd",
                        smo_cfg: smo_mod.SMOConfig = smo_mod.SMOConfig(),
                        gd_cfg: gd_mod.GDConfig = gd_mod.GDConfig(),
                        kernel: K.KernelParams = K.KernelParams(),
+                       engine: Optional[KE.EngineConfig | str] = None,
                        n_real_tasks: Optional[int] = None) -> OvOFit:
     """The paper's "Multi-Tensorflow": one session per task, sequentially.
 
     A Python loop of separately-dispatched solver calls — intentionally
     NOT vmapped/sharded, to reproduce the baseline's execution profile.
+    The jitted solver is built ONCE outside the loop: every task has the
+    same padded shape, so one trace serves all of them (the sequential
+    dispatch profile is preserved; only redundant retraces went away).
     """
     c_total = tasks.x.shape[0] if n_real_tasks is None else n_real_tasks
+    if solver == "gd":
+        solve = jax.jit(partial(gd_mod.binary_gd, cfg=gd_cfg,
+                                kernel=kernel, engine=engine))
+    else:
+        solve = jax.jit(partial(smo_mod.binary_smo, cfg=smo_cfg,
+                                kernel=kernel, engine=engine))
     outs = []
     for t in range(c_total):
         xt = jnp.asarray(tasks.x[t])
         yt = jnp.asarray(tasks.y[t])
         mt = jnp.asarray(tasks.mask[t])
+        r = solve(xt, yt, mt)
         if solver == "gd":
-            r = jax.jit(partial(gd_mod.binary_gd, cfg=gd_cfg, kernel=kernel))(
-                xt, yt, mt)
             outs.append(OvOFit(r.alpha, r.b, r.n_iter, jnp.asarray(True)))
         else:
-            r = jax.jit(partial(smo_mod.binary_smo, cfg=smo_cfg,
-                                kernel=kernel))(xt, yt, mt)
             outs.append(OvOFit(r.alpha, r.b, r.n_iter, r.converged))
     stack = lambda *xs: jnp.stack(xs)
     return jax.tree.map(stack, *outs)

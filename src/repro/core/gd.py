@@ -27,6 +27,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import kernel_engine as KE
 from repro.core import kernels as K
 
 
@@ -45,13 +46,17 @@ class GDResult(NamedTuple):
     n_iter: jax.Array
 
 
-def _dual_loss(alpha, y, gram, eq_penalty, n_valid):
+def _dual_loss_mv(alpha, y, matvec, eq_penalty, n_valid):
     ay = alpha * y
-    dual = jnp.sum(alpha) - 0.5 * ay @ (gram @ ay)
+    dual = jnp.sum(alpha) - 0.5 * ay @ matvec(ay)
     eq = jnp.sum(ay)
     # penalty normalized by n so the curvature (hence the stable lr) does
     # not grow with dataset size — plain GD diverges otherwise
     return -dual + eq_penalty * eq * eq / n_valid
+
+
+def _dual_loss(alpha, y, gram, eq_penalty, n_valid):
+    return _dual_loss_mv(alpha, y, lambda v: gram @ v, eq_penalty, n_valid)
 
 
 def binary_gd(x: jax.Array,
@@ -60,37 +65,53 @@ def binary_gd(x: jax.Array,
               *,
               cfg: GDConfig = GDConfig(),
               kernel: K.KernelParams = K.KernelParams(),
-              gram: Optional[jax.Array] = None) -> GDResult:
-    """Train one binary SVM by projected gradient descent on the dual."""
+              gram: Optional[jax.Array] = None,
+              engine: Optional[KE.KernelEngine | KE.EngineConfig | str]
+              = None) -> GDResult:
+    """Train one binary SVM by projected gradient descent on the dual.
+
+    ``engine`` routes the per-step Gram interaction through a
+    ``KernelEngine`` (``engine.matvec`` — chunked backends keep the
+    baseline's full-interaction-per-step cost profile WITHOUT holding the
+    (n, n) Gram). ``gram=`` is the legacy shim and forces the dense path.
+    """
     n = x.shape[0]
     x = x.astype(jnp.float32)
     y = y.astype(jnp.float32)
     if mask is None:
         mask = jnp.ones((n,), dtype=bool)
     mask = mask & (jnp.abs(y) > 0.5)
-    if gram is None:
-        gram = K.make_gram_fn(kernel)(x, x)
+
+    if gram is not None:
+        matvec = lambda v: gram @ v
+    else:
+        if engine is None:
+            engine = KE.DenseKernelEngine(x, kernel)
+        elif not isinstance(engine, KE.KernelEngine):
+            engine = KE.make_engine(x, kernel, engine)
+        matvec = engine.matvec
 
     n_valid = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
-    grad_fn = jax.grad(_dual_loss)
+    grad_fn = jax.grad(_dual_loss_mv)
 
     def step(alpha, _):
-        g = grad_fn(alpha, y, gram, cfg.eq_penalty, n_valid)
+        g = grad_fn(alpha, y, matvec, cfg.eq_penalty, n_valid)
         alpha = alpha - cfg.lr * g
         alpha = jnp.clip(alpha, 0.0, cfg.C) * mask   # projection onto box
-        return alpha, _dual_loss(alpha, y, gram, cfg.eq_penalty, n_valid)
+        return alpha, _dual_loss_mv(alpha, y, matvec, cfg.eq_penalty,
+                                    n_valid)
 
     alpha0 = jnp.zeros((n,), jnp.float32)
     alpha, losses = jax.lax.scan(step, alpha0, None, length=cfg.steps)
 
-    b = _estimate_bias(alpha, y, gram, mask, cfg.C)
+    b = _estimate_bias(alpha, y, matvec, mask, cfg.C)
     return GDResult(alpha=alpha, b=b, loss_curve=losses,
                     n_iter=jnp.asarray(cfg.steps, jnp.int32))
 
 
-def _estimate_bias(alpha, y, gram, mask, c):
+def _estimate_bias(alpha, y, matvec, mask, c):
     """b from free support vectors (0 < a < C), falling back to all SVs."""
-    g = gram @ (alpha * y)                      # decision without bias
+    g = matvec(alpha * y)                       # decision without bias
     free = mask & (alpha > 1e-6) & (alpha < c - 1e-6)
     anysv = mask & (alpha > 1e-6)
     use = jnp.where(jnp.any(free), free, anysv)

@@ -1,0 +1,370 @@
+"""Unified KernelEngine — every Gram evaluation in the system, one interface.
+
+The paper's central observation is that SVM training cost is dominated by
+kernel (Gram) evaluations inside the QP solve, and that the winning
+implementation is the one that organizes those evaluations for the
+hardware. Before this module the repo scattered that logic over four call
+sites (inline Pallas routing in ``core.smo``, the decision paths in
+``core.svm``, the OvO layer in ``core.dist`` and ``kernels.ops``), and
+every path either materialized the full O(n^2) Gram or recomputed rows
+from scratch. ``KernelEngine`` centralizes it.
+
+Interface (all methods jit/vmap-safe; ``x`` may be a tracer)::
+
+    engine.full()            # (n, n) Gram — dense backends only
+    engine.diag()            # (n,)  K(x_i, x_i)
+    engine.row(i, cache)     # ((n,), cache') one kernel row, LRU-cached
+    engine.block(rows, cols) # (r, c) arbitrary sub-block
+    engine.matvec(v)         # (n,)  K @ v, chunked — never builds (n, n)
+    engine.cross(z)          # (t, n) K(z, X) test-vs-train block
+    engine.decide(z, coef,b) # (t,)  K(z, X) @ coef + b, chunked serving
+    engine.init_cache()      # functional row-cache state (None if unused)
+
+Backends
+--------
+``dense``
+    Precomputes the (n, n) Gram once (jnp reference kernels). Fastest for
+    n up to a few thousand; memory O(n^2). ``row`` is a gather, the cache
+    state is ``None``.
+``chunked``
+    Never materializes (n, n). Rows are computed on the fly in O(n d) and
+    cached in a fixed-capacity functional LRU keyed on the working-set
+    index — SMO revisits the same violating pair region for many
+    consecutive iterations, so the cache converts most row requests into
+    a (slots, n) gather. ``matvec``/``decide`` stream over row blocks of
+    ``chunk`` samples (peak extra memory O(chunk * n)). This is the
+    backend that trains n = 16k-32k RBF problems the dense path cannot
+    hold.
+``pallas``
+    The chunked layout with the Gram hot spots routed through the tiled
+    Pallas TPU kernels in ``repro.kernels.ops`` (MXU-aligned VMEM blocks;
+    RBF and linear). Non-Pallas kernels fall back to the jnp path.
+
+Adaptive shrinking (solver-side, engine-aware)
+----------------------------------------------
+``SMOConfig(shrink_every=k)`` turns on mask-based adaptive shrinking in
+``core.smo.binary_smo`` (Narasimhan et al., *Fast SVMs Using Parallel
+Adaptive Shrinking*): every ``k`` convergence checks, samples whose alpha
+is pinned at a bound (0 or C) and whose optimality value ``f`` lies
+beyond the current ``[b_up, b_low]`` corridor on its non-violating side
+(``f > b_low + slack`` for I_up-only members, ``f < b_up - slack`` for
+I_low-only, slack = ``shrink_slack * tol``) are frozen out of the active
+set; working-set selection and f-cache updates are restricted to the
+survivors. When the
+active set converges, the solver reconstructs the exact f-cache for ALL
+samples with one ``engine.matvec`` (chunked — no (n, n) materialization)
+and re-checks the un-shrunk KKT conditions before reporting convergence;
+if the full problem still violates, the active set resets and
+optimization resumes. Knobs: ``shrink_every`` (checks between shrink
+passes; 0 disables) and ``shrink_slack`` (corridor slack in units of
+``tol``; larger = more conservative freezing).
+
+Shrinking targets the SINGLE-problem (binary, scalar-jit) path. Under
+``vmap``/``shard_map`` OvO batching, ``lax.cond`` lowers to ``select``
+and executes BOTH branches, so the un-shrink ``matvec`` would run at
+every convergence check for every task — leave ``shrink_every=0`` there
+(the ``core.dist`` entry points also strip the LRU row cache for the
+same reason: a batched cache lookup recomputes the row regardless).
+
+Migration note (old ``gram=`` / ``row_fn=`` / ``use_pallas`` arguments)
+-----------------------------------------------------------------------
+The pre-engine keyword plumbing still works as thin deprecation shims::
+
+    binary_smo(x, y, gram=G)                  -> DenseKernelEngine(gram=G)
+    binary_smo(x, y, row_fn=f)                -> ChunkedKernelEngine(row_fn=f)
+    SMOConfig(use_pallas=True)                -> pallas backend
+    SMOConfig(precompute_gram=False)          -> chunked backend
+
+New code should pass ``engine=EngineConfig(backend=...)`` (built lazily
+inside the jitted solver) or a bound engine from ``make_engine``:
+
+    eng = make_engine(x, kernel, EngineConfig(backend="chunked"))
+    r = binary_smo(x, y, engine=eng, cfg=SMOConfig(shrink_every=4))
+
+``SVC`` accepts ``engine="auto"|"dense"|"chunked"|"pallas"`` or a full
+``EngineConfig``, and after ``fit`` serves predictions from a compacted
+support-vector set (alpha > 0 rows only), so serving cost scales with
+#SV rather than n.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernels as K
+
+
+class RowCache(NamedTuple):
+    """Functional LRU row-cache state (threaded through solver loops)."""
+
+    keys: jax.Array    # (slots,) int32 row index per slot, -1 = empty
+    stamp: jax.Array   # (slots,) int32 last-use tick (min = LRU victim)
+    rows: jax.Array    # (slots, n) float32 cached kernel rows
+    clock: jax.Array   # () int32 monotone tick
+    hits: jax.Array    # () int32 lookup statistics
+    misses: jax.Array  # () int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine selection/config — hashable, safe to close over jit.
+
+    backend:     auto | dense | chunked | pallas.
+    cache_slots: LRU row-cache capacity (chunked/pallas row mode).
+    chunk:       row-block size for matvec()/decide() streaming.
+    dense_limit: 'auto' picks dense up to this n, chunked above; also the
+                 guard above which ChunkedKernelEngine.full() refuses to
+                 materialize (n, n).
+    """
+
+    backend: str = "auto"
+    cache_slots: int = 32
+    chunk: int = 2048
+    dense_limit: int = 8192
+
+
+class KernelEngine:
+    """Base: owns x + kernel params; subclasses define the Gram strategy."""
+
+    backend = "base"
+
+    def __init__(self, x: jax.Array, kernel: K.KernelParams,
+                 cfg: EngineConfig = EngineConfig()):
+        self.x = jnp.asarray(x, jnp.float32)
+        self.n = self.x.shape[0]
+        self.kernel = kernel
+        self.cfg = cfg
+        self._gram_fn = K.make_gram_fn(kernel)
+
+    # -------------------------------------------------------- interface
+    def full(self) -> jax.Array:
+        raise NotImplementedError
+
+    def diag(self) -> jax.Array:
+        if self.kernel.name == "rbf":  # K(x, x) = exp(0) exactly
+            return jnp.ones((self.n,), jnp.float32)
+        return jax.vmap(lambda r: self._gram_fn(r[None], r[None])[0, 0])(
+            self.x)
+
+    def row(self, i: jax.Array, cache=None):
+        raise NotImplementedError
+
+    def block(self, rows: jax.Array, cols: jax.Array) -> jax.Array:
+        return self._gram_fn(self.x[rows], self.x[cols])
+
+    def cross(self, z: jax.Array) -> jax.Array:
+        return self._gram_fn(jnp.asarray(z, jnp.float32), self.x)
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def decide(self, z: jax.Array, coef: jax.Array,
+               b: jax.Array | float = 0.0) -> jax.Array:
+        """K(z, X) @ coef + b, streamed over test-row chunks."""
+        z = jnp.asarray(z, jnp.float32)
+        t = z.shape[0]
+        chunk = min(self.cfg.chunk, max(t, 1))
+        pad = (-t) % chunk
+        zp = jnp.pad(z, ((0, pad), (0, 0)))
+        blocks = zp.reshape(-1, chunk, z.shape[1])
+        out = jax.lax.map(lambda zb: self.cross(zb) @ coef, blocks)
+        return out.reshape(-1)[:t] + b
+
+    def init_cache(self):
+        return None
+
+
+class DenseKernelEngine(KernelEngine):
+    """Precomputed (n, n) Gram — the n<=~8k fast path."""
+
+    backend = "dense"
+
+    def __init__(self, x, kernel, cfg: EngineConfig = EngineConfig(), *,
+                 gram: Optional[jax.Array] = None):
+        super().__init__(x, kernel, cfg)
+        self.gram = self._gram_fn(self.x, self.x) if gram is None else gram
+
+    def full(self):
+        return self.gram
+
+    def diag(self):
+        return jnp.diagonal(self.gram)
+
+    def row(self, i, cache=None):
+        return self.gram[i], cache
+
+    def block(self, rows, cols):
+        return self.gram[rows][:, cols]
+
+    def matvec(self, v):
+        return self.gram @ v
+
+
+class ChunkedKernelEngine(KernelEngine):
+    """On-the-fly rows + functional LRU cache; O(n d) resident memory."""
+
+    backend = "chunked"
+
+    def __init__(self, x, kernel, cfg: EngineConfig = EngineConfig(), *,
+                 row_fn: Optional[Callable] = None):
+        super().__init__(x, kernel, cfg)
+        self._row_fn = row_fn
+
+    # ------------------------------------------------------------- rows
+    def _compute_row(self, i):
+        if self._row_fn is not None:
+            return self._row_fn(self.x, self.x[i])
+        return self._gram_fn(self.x, self.x[i][None, :])[:, 0]
+
+    def init_cache(self) -> Optional[RowCache]:
+        slots = self.cfg.cache_slots
+        if slots <= 0:
+            return None
+        z32 = jnp.zeros((), jnp.int32)
+        return RowCache(keys=jnp.full((slots,), -1, jnp.int32),
+                        stamp=jnp.zeros((slots,), jnp.int32),
+                        rows=jnp.zeros((slots, self.n), jnp.float32),
+                        clock=z32, hits=z32, misses=z32)
+
+    def row(self, i, cache: Optional[RowCache] = None):
+        if cache is None:
+            return self._compute_row(i), None
+        hit_vec = cache.keys == i
+        hit_slot = jnp.argmax(hit_vec)
+        lru_slot = jnp.argmin(cache.stamp)
+        tick = cache.clock + 1
+
+        def on_hit(c: RowCache):
+            return c.rows[hit_slot], c._replace(
+                stamp=c.stamp.at[hit_slot].set(tick),
+                clock=tick, hits=c.hits + 1)
+
+        def on_miss(c: RowCache):
+            r = self._compute_row(i)
+            return r, c._replace(
+                keys=c.keys.at[lru_slot].set(i.astype(jnp.int32)
+                                             if hasattr(i, "astype")
+                                             else jnp.int32(i)),
+                rows=c.rows.at[lru_slot].set(r),
+                stamp=c.stamp.at[lru_slot].set(tick),
+                clock=tick, misses=c.misses + 1)
+
+        return jax.lax.cond(jnp.any(hit_vec), on_hit, on_miss, cache)
+
+    # ---------------------------------------------------------- streams
+    def _row_blocks(self):
+        chunk = min(self.cfg.chunk, self.n)
+        pad = (-self.n) % chunk
+        xp = jnp.pad(self.x, ((0, pad), (0, 0)))
+        return xp.reshape(-1, chunk, self.x.shape[1]), chunk
+
+    def matvec(self, v):
+        blocks, _ = self._row_blocks()
+        out = jax.lax.map(lambda xb: self._gram_fn(xb, self.x) @ v, blocks)
+        return out.reshape(-1)[:self.n]
+
+    def full(self):
+        if self.n > self.cfg.dense_limit:
+            raise RuntimeError(
+                f"ChunkedKernelEngine.full(): refusing to materialize a "
+                f"({self.n}, {self.n}) Gram (dense_limit="
+                f"{self.cfg.dense_limit}); use row()/block()/matvec()")
+        blocks, _ = self._row_blocks()
+        out = jax.lax.map(lambda xb: self._gram_fn(xb, self.x), blocks)
+        return out.reshape(-1, self.n)[:self.n]
+
+
+class PallasKernelEngine(ChunkedKernelEngine):
+    """Chunked layout with Gram hot spots on the tiled Pallas TPU kernels.
+
+    RBF and linear route through ``repro.kernels.ops`` (MXU-aligned VMEM
+    tiles); other kernels fall back to the jnp reference path.
+    """
+
+    backend = "pallas"
+
+    def __init__(self, x, kernel, cfg: EngineConfig = EngineConfig()):
+        from repro.kernels import ops as pallas_ops
+        self._ops = pallas_ops
+        self._pallas_mode = (kernel.name
+                             if kernel.name in ("rbf", "linear") else None)
+        row_fn = None
+        if kernel.name == "rbf":
+            row_fn = pallas_ops.gram_row_fn(gamma=kernel.gamma)
+        super().__init__(x, kernel, cfg, row_fn=row_fn)
+
+    def _pallas_gram(self, a, b):
+        return self._ops.rbf_gram(a, b, gamma=self.kernel.gamma,
+                                  mode=self._pallas_mode)
+
+    def cross(self, z):
+        if self._pallas_mode is None:
+            return super().cross(z)
+        return self._pallas_gram(jnp.asarray(z, jnp.float32), self.x)
+
+    def block(self, rows, cols):
+        if self._pallas_mode is None:
+            return super().block(rows, cols)
+        return self._pallas_gram(self.x[rows], self.x[cols])
+
+    def matvec(self, v):
+        if self._pallas_mode is None:
+            return super().matvec(v)
+        blocks, _ = self._row_blocks()
+        out = jax.lax.map(lambda xb: self._pallas_gram(xb, self.x) @ v,
+                          blocks)
+        return out.reshape(-1)[:self.n]
+
+    def decide(self, z, coef, b=0.0):
+        if self.kernel.name == "rbf":
+            return self._ops.decision(jnp.asarray(z, jnp.float32), self.x,
+                                      coef, b, gamma=self.kernel.gamma)
+        return super().decide(z, coef, b)
+
+    def full(self):
+        if self.n > self.cfg.dense_limit:
+            raise RuntimeError(
+                f"PallasKernelEngine.full(): refusing to materialize a "
+                f"({self.n}, {self.n}) Gram (dense_limit="
+                f"{self.cfg.dense_limit})")
+        if self._pallas_mode is None:
+            return super().full()
+        return self._pallas_gram(self.x, self.x)
+
+
+_BACKENDS = {
+    "dense": DenseKernelEngine,
+    "chunked": ChunkedKernelEngine,
+    "pallas": PallasKernelEngine,
+}
+
+
+def make_engine(x: jax.Array, kernel: K.KernelParams,
+                cfg: EngineConfig | str = EngineConfig(), *,
+                gram: Optional[jax.Array] = None,
+                row_fn: Optional[Callable] = None) -> KernelEngine:
+    """Resolve an EngineConfig (or backend name) into a bound engine.
+
+    ``gram``/``row_fn`` are the deprecation shims for the old keyword
+    plumbing: a provided Gram forces the dense backend, a provided row
+    function forces chunked.
+    """
+    if isinstance(cfg, str):
+        cfg = EngineConfig(backend=cfg)
+    backend = cfg.backend
+    if gram is not None:
+        return DenseKernelEngine(x, kernel, cfg, gram=gram)
+    if row_fn is not None:
+        return ChunkedKernelEngine(x, kernel, cfg, row_fn=row_fn)
+    if backend == "auto":
+        backend = "dense" if x.shape[0] <= cfg.dense_limit else "chunked"
+    try:
+        cls = _BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine backend {backend!r}; "
+            f"expected one of {sorted(_BACKENDS)} or 'auto'") from None
+    return cls(x, kernel, cfg)

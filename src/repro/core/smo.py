@@ -29,6 +29,15 @@ Each iteration updates the maximal-violating pair (i_low, i_up) and then
 updates the WHOLE f-cache with two kernel rows — the fully data-parallel
 "one thread per sample" stage.
 
+All Gram access goes through a ``repro.core.kernel_engine.KernelEngine``
+(dense precomputed, chunked on-the-fly with an LRU row cache, or
+Pallas-tiled); the old ``gram=`` / ``row_fn=`` / ``use_pallas`` plumbing
+survives as deprecation shims that resolve to an engine. With
+``cfg.shrink_every > 0`` the solver runs mask-aware adaptive shrinking:
+bound-pinned samples outside the violation corridor are frozen out of
+selection and f-cache updates, and a final un-shrunk KKT re-check (one
+chunked ``engine.matvec``) gates the reported convergence.
+
 Everything is mask-aware so that one ``vmap``/``shard_map`` program can
 drive many padded one-vs-one tasks (the MPI layer in ``core.dist``).
 """
@@ -41,6 +50,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import kernel_engine as KE
 from repro.core import kernels as K
 
 _EPS = 1e-8
@@ -55,10 +65,13 @@ class SMOConfig:
     tol: float = 1e-3
     max_iter: int = 100_000       # hard cap on SMO pair updates
     check_every: int = 32         # device iterations per convergence check
-    precompute_gram: bool = True  # n<=~8k: keep the full Gram in memory
-    use_pallas: bool = False      # route Gram/selection through Pallas ops
+    precompute_gram: bool = True  # legacy shim -> dense/chunked backend
+    use_pallas: bool = False      # legacy shim -> pallas backend
     selection: str = "first"      # first (paper) | second (WSS2, beyond-
                                   # paper: maximal-gain partner choice)
+    shrink_every: int = 0         # convergence checks between adaptive-
+                                  # shrinking passes; 0 disables shrinking
+    shrink_slack: float = 1.0     # freeze corridor slack, in units of tol
 
 
 class SMOResult(NamedTuple):
@@ -67,6 +80,8 @@ class SMOResult(NamedTuple):
     n_iter: jax.Array     # () pair updates actually applied
     converged: jax.Array  # () bool
     gap: jax.Array        # () final b_low - b_up duality-violation gap
+    n_active: jax.Array   # () samples still active at exit (== n valid
+                          # when shrinking is off)
 
 
 class _State(NamedTuple):
@@ -75,6 +90,10 @@ class _State(NamedTuple):
     n_iter: jax.Array
     b_up: jax.Array
     b_low: jax.Array
+    active: jax.Array   # (n,) bool adaptive-shrinking active set
+    done: jax.Array     # () bool convergence decided (post un-shrunk check)
+    checks: jax.Array   # () int32 outer convergence checks run
+    cache: object       # engine row-cache state (None for dense)
 
 
 def _selection(f, alpha, y, mask, c):
@@ -101,9 +120,33 @@ def _selection(f, alpha, y, mask, c):
     return f_up[i_up], i_up, f_low[i_low], i_low
 
 
-def _smo_iteration(state: _State, *, x, y, mask, gram, row_fn,
-                   cfg: SMOConfig, _kdiag=None):
-    """One working-set pair update + full f-cache refresh.
+def _shrink_active(f, alpha, y, mask, b_up, b_low, cfg: SMOConfig):
+    """Samples that may still join a violating pair (LIBSVM-style).
+
+    Freeze i when alpha_i is pinned at a bound AND its f lies beyond the
+    current [b_up, b_low] corridor on its non-violating side (slack in
+    units of tol): an I_up-only member with f > b_low has no I_low
+    partner to violate with (it is KEPT while f <= b_low + slack), and
+    symmetrically an I_low-only member is frozen once f < b_up - slack.
+    Free (0 < a < C) samples are in both index sets and never frozen.
+    """
+    c = cfg.C
+    eps = 1e-6 * c
+    slack = cfg.shrink_slack * cfg.tol
+    pos, neg = y > 0, y <= 0
+    not_upper = alpha < c - eps
+    not_lower = alpha > eps
+    in_up = (pos & not_upper) | (neg & not_lower)
+    in_low = (pos & not_lower) | (neg & not_upper)
+    free = not_upper & not_lower
+    keep_up = in_up & (f <= b_low + slack)
+    keep_low = in_low & (f >= b_up - slack)
+    return mask & (free | keep_up | keep_low)
+
+
+def _smo_iteration(state: _State, *, y, mask, engine: KE.KernelEngine,
+                   cfg: SMOConfig, diag=None, shrink: bool = False):
+    """One working-set pair update + f-cache refresh over the active set.
 
     selection="first": maximal violating pair (the paper's GPU solver).
     selection="second" (WSS2, Fan et al. 2005): i = argmin_{I_up} f, then
@@ -113,22 +156,20 @@ def _smo_iteration(state: _State, *, x, y, mask, gram, row_fn,
     """
     alpha, f = state.alpha, state.f
     c = cfg.C
-    b_up, i_up, b_low, i_low = _selection(f, alpha, y, mask, c)
-    active = b_low > b_up + 2.0 * cfg.tol  # not yet converged
+    sel_mask = (mask & state.active) if shrink else mask
+    b_up, i_up, b_low, i_low = _selection(f, alpha, y, sel_mask, c)
+    step_live = b_low > b_up + 2.0 * cfg.tol  # not yet converged
 
     j = i_up
-    if gram is not None:
-        row_j = gram[j]
-    else:
-        row_j = row_fn(x, x[j])
+    row_j, cache = engine.row(j, state.cache)
     k_jj = row_j[j]
 
     if cfg.selection == "second":
         # gain_l = (f_l - b_up)^2 / (2 eta_lj) over valid I_low partners
         eps = 1e-6 * c
         pos, neg = y > 0, y <= 0
-        low_mask = mask & ((pos & (alpha > eps)) | (neg & (alpha < c - eps)))
-        diag = jnp.diagonal(gram) if gram is not None else _kdiag
+        low_mask = sel_mask & ((pos & (alpha > eps))
+                               | (neg & (alpha < c - eps)))
         eta_all = jnp.maximum(diag + k_jj - 2.0 * row_j, 1e-12)
         df = f - b_up
         gain = jnp.where(low_mask & (df > 0.0), df * df / eta_all, -jnp.inf)
@@ -139,10 +180,7 @@ def _smo_iteration(state: _State, *, x, y, mask, gram, row_fn,
     y_i, y_j = y[i], y[j]
     a_i, a_j = alpha[i], alpha[j]
 
-    if gram is not None:
-        row_i = gram[i]
-    else:
-        row_i = row_fn(x, x[i])
+    row_i, cache = engine.row(i, cache)
     k_ii = row_i[i]
     k_ij = row_i[j]
     # recompute the pair's violation for the update step size
@@ -167,19 +205,52 @@ def _smo_iteration(state: _State, *, x, y, mask, gram, row_fn,
     a_i_new = jnp.where(a_i_new < snap, 0.0,
                         jnp.where(a_i_new > c - snap, c, a_i_new))
 
-    d_i = jnp.where(active, a_i_new - a_i, 0.0)
-    d_j = jnp.where(active, a_j_new - a_j, 0.0)
+    d_i = jnp.where(step_live, a_i_new - a_i, 0.0)
+    d_j = jnp.where(step_live, a_j_new - a_j, 0.0)
 
     alpha = alpha.at[i].add(d_i)
     alpha = alpha.at[j].add(d_j)
-    # the "one thread per sample" stage: every sample updates its f entry
-    f = f + d_i * y_i * row_i + d_j * y_j * row_j
+    # the "one thread per sample" stage: every active sample updates its
+    # f entry (shrinking restricts the update to the active set; frozen
+    # entries are reconstructed exactly at the un-shrink check). NOTE:
+    # the float association (f + a) + b is load-bearing — it must match
+    # across vmapped/sequential/sharded dispatch for bit-compatibility.
+    if shrink:
+        upd = d_i * y_i * row_i + d_j * y_j * row_j
+        f = jnp.where(state.active, f + upd, f)
+    else:
+        f = f + d_i * y_i * row_i + d_j * y_j * row_j
 
-    return _State(alpha=alpha,
-                  f=f,
-                  n_iter=state.n_iter + active.astype(jnp.int32),
-                  b_up=b_up,
-                  b_low=b_low)
+    return state._replace(alpha=alpha,
+                          f=f,
+                          n_iter=state.n_iter + step_live.astype(jnp.int32),
+                          b_up=b_up,
+                          b_low=b_low,
+                          cache=cache)
+
+
+def _resolve_engine(x, kernel: K.KernelParams, cfg: SMOConfig,
+                    engine, gram, row_fn) -> KE.KernelEngine:
+    """Engine resolution incl. the legacy gram=/row_fn=/use_pallas shims."""
+    if isinstance(engine, KE.KernelEngine):
+        return engine
+    if gram is not None or row_fn is not None:
+        base = engine if isinstance(engine, KE.EngineConfig) else (
+            KE.EngineConfig(backend=engine) if isinstance(engine, str)
+            else KE.EngineConfig())
+        return KE.make_engine(x, kernel, base, gram=gram, row_fn=row_fn)
+    if engine is not None:  # EngineConfig or backend name
+        return KE.make_engine(x, kernel, engine)
+    # legacy SMOConfig flags
+    if cfg.use_pallas and kernel.name == "rbf":
+        if cfg.precompute_gram:
+            from repro.kernels import ops as pallas_ops
+            return KE.DenseKernelEngine(
+                x, kernel, gram=pallas_ops.rbf_gram(x, x,
+                                                    gamma=kernel.gamma))
+        return KE.PallasKernelEngine(x, kernel)
+    backend = "dense" if cfg.precompute_gram else "chunked"
+    return KE.make_engine(x, kernel, KE.EngineConfig(backend=backend))
 
 
 def binary_smo(x: jax.Array,
@@ -188,6 +259,7 @@ def binary_smo(x: jax.Array,
                *,
                cfg: SMOConfig = SMOConfig(),
                kernel: K.KernelParams = K.KernelParams(),
+               engine: Optional[KE.KernelEngine | KE.EngineConfig | str] = None,
                gram: Optional[jax.Array] = None,
                row_fn: Optional[Callable] = None) -> SMOResult:
     """Solve one binary soft-margin SVM dual with parallel SMO.
@@ -197,11 +269,13 @@ def binary_smo(x: jax.Array,
       y: (n,) labels in {+1, -1} (float or int).
       mask: (n,) bool validity mask — padded entries are never selected and
         keep alpha = 0 (used by the distributed OvO layer).
-      gram: optional precomputed (n, n) Gram matrix. If None and
-        ``cfg.precompute_gram``, it is computed here; otherwise kernel rows
-        are computed on the fly (O(n d) memory).
-      row_fn: optional ``(X, z) -> K(X, z)`` row function override (e.g.
-        the Pallas tiled row kernel from ``repro.kernels.ops``).
+      engine: a bound ``KernelEngine``, an ``EngineConfig``, or a backend
+        name ("dense" | "chunked" | "pallas" | "auto"). Owns all Gram
+        computation.
+      gram: DEPRECATED shim — precomputed (n, n) Gram; forces the dense
+        engine backend.
+      row_fn: DEPRECATED shim — ``(X, z) -> K(X, z)`` row override; forces
+        the chunked engine backend.
     """
     n = x.shape[0]
     x = x.astype(jnp.float32)
@@ -210,62 +284,86 @@ def binary_smo(x: jax.Array,
         mask = jnp.ones((n,), dtype=bool)
     mask = mask & (jnp.abs(y) > 0.5)  # padded labels may be 0
 
-    if cfg.use_pallas and kernel.name == "rbf":
-        # route the Gram hot spot through the tiled Pallas kernels
-        from repro.kernels import ops as pallas_ops
-        if row_fn is None:
-            row_fn = pallas_ops.gram_row_fn(gamma=kernel.gamma)
-        if gram is None and cfg.precompute_gram:
-            gram = pallas_ops.rbf_gram(x, x, gamma=kernel.gamma)
-    if row_fn is None:
-        gram_fn = K.make_gram_fn(kernel)
-        row_fn = lambda xs, z: gram_fn(xs, z[None, :])[:, 0]
-    if gram is None and cfg.precompute_gram:
-        gram = K.make_gram_fn(kernel)(x, x)
+    eng = _resolve_engine(x, kernel, cfg, engine, gram, row_fn)
+    shrink = cfg.shrink_every > 0
 
     f0 = -y  # alpha = 0  =>  f_i = -y_i
     state0 = _State(alpha=jnp.zeros((n,), jnp.float32), f=f0,
                     n_iter=jnp.zeros((), jnp.int32),
                     b_up=jnp.asarray(-1.0, jnp.float32),
-                    b_low=jnp.asarray(1.0, jnp.float32))
+                    b_low=jnp.asarray(1.0, jnp.float32),
+                    active=mask,
+                    done=jnp.asarray(False),
+                    checks=jnp.zeros((), jnp.int32),
+                    cache=eng.init_cache())
 
-    kdiag = None
-    if cfg.selection == "second" and gram is None:
-        # K(x,x) diagonal for the WSS2 eta terms (RBF: exactly 1)
-        if kernel.name == "rbf":
-            kdiag = jnp.ones((n,), jnp.float32)
-        else:
-            gf = K.make_gram_fn(kernel)
-            kdiag = jax.vmap(lambda r: gf(r[None], r[None])[0, 0])(x)
-    iteration = partial(_smo_iteration, x=x, y=y, mask=mask, gram=gram,
-                        row_fn=row_fn, cfg=cfg, _kdiag=kdiag)
+    diag = eng.diag() if cfg.selection == "second" else None
+    iteration = partial(_smo_iteration, y=y, mask=mask, engine=eng,
+                        cfg=cfg, diag=diag, shrink=shrink)
 
     def cond(state: _State):
-        return (state.b_low > state.b_up + 2.0 * cfg.tol) & (
-            state.n_iter < cfg.max_iter)
+        return (~state.done) & (state.n_iter < cfg.max_iter)
 
     def body(state: _State):
         # paper Fig. 3: run `check_every` device iterations between checks
-        return jax.lax.fori_loop(0, cfg.check_every,
-                                 lambda _, s: iteration(s), state)
+        state = jax.lax.fori_loop(0, cfg.check_every,
+                                  lambda _, s: iteration(s), state)
+        conv_active = state.b_low <= state.b_up + 2.0 * cfg.tol
+        if not shrink:
+            return state._replace(done=conv_active)
+        state = state._replace(checks=state.checks + 1)
+
+        def unshrink(s: _State):
+            # exact gradient for ALL samples via one chunked matvec, then
+            # the un-shrunk KKT re-check; resume on the full set if the
+            # shrunk optimum does not survive it
+            f_full = eng.matvec(s.alpha * y) - y
+            b_up, _, b_low, _ = _selection(f_full, s.alpha, y, mask, cfg.C)
+            return s._replace(f=f_full, active=mask,
+                              done=b_low <= b_up + 2.0 * cfg.tol,
+                              b_up=b_up, b_low=b_low)
+
+        def maybe_shrink(s: _State):
+            do = (s.checks % cfg.shrink_every) == 0
+            shrunk = _shrink_active(s.f, s.alpha, y, mask, s.b_up,
+                                    s.b_low, cfg) & s.active
+            return s._replace(active=jnp.where(do, shrunk, s.active))
+
+        return jax.lax.cond(conv_active, unshrink, maybe_shrink, state)
 
     state = jax.lax.while_loop(cond, body, state0)
-    # final selection for the reported gap / bias
-    b_up, _, b_low, _ = _selection(state.f, state.alpha, y, mask, cfg.C)
+    # final selection for the reported gap / bias — on the UN-shrunk set
+    # (shrinking may leave frozen entries with a stale f if the iteration
+    # cap fired mid-phase; reconstruct before reporting)
+    f_final = eng.matvec(state.alpha * y) - y if shrink else state.f
+    b_up, _, b_low, _ = _selection(f_final, state.alpha, y, mask, cfg.C)
     b = -(b_up + b_low) / 2.0
+    n_active = jnp.sum((state.active & mask).astype(jnp.int32))
     return SMOResult(alpha=state.alpha * mask, b=b, n_iter=state.n_iter,
                      converged=b_low <= b_up + 2.0 * cfg.tol,
-                     gap=b_low - b_up)
+                     gap=b_low - b_up, n_active=n_active)
 
 
 def decision_function(x_train, y_train, alpha, b, x_test, *,
                       kernel: K.KernelParams = K.KernelParams(),
-                      gram_fn: Optional[Callable] = None) -> jax.Array:
-    """f(z) = sum_i alpha_i y_i K(x_i, z) + b for each test row z."""
+                      gram_fn: Optional[Callable] = None,
+                      engine: Optional[KE.KernelEngine | KE.EngineConfig | str]
+                      = None) -> jax.Array:
+    """f(z) = sum_i alpha_i y_i K(x_i, z) + b for each test row z.
+
+    With ``engine`` the evaluation streams over test-row chunks through
+    ``engine.decide`` (never materializing the (n_test, n_train) block
+    for chunked backends); otherwise the legacy full cross-Gram path.
+    """
+    coef = alpha * y_train.astype(jnp.float32)
+    if engine is not None:
+        if not isinstance(engine, KE.KernelEngine):
+            engine = KE.make_engine(
+                jnp.asarray(x_train, jnp.float32), kernel, engine)
+        return engine.decide(x_test, coef, b)
     if gram_fn is None:
         gram_fn = K.make_gram_fn(kernel)
     kmat = gram_fn(x_test.astype(jnp.float32), x_train.astype(jnp.float32))
-    coef = (alpha * y_train.astype(jnp.float32))
     return kmat @ coef + b
 
 

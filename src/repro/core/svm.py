@@ -2,6 +2,7 @@
 
     clf = SVC(kernel="rbf", C=1.0, solver="smo")      # paper's CUDA path
     clf = SVC(kernel="rbf", C=1.0, solver="gd")       # paper's TF baseline
+    clf = SVC(engine="chunked", shrink_every=4)       # n >> 8k training
     clf.fit(X, y)                                     # binary OR multiclass
     clf.predict(Xt); clf.score(Xt, yt)
 
@@ -9,6 +10,12 @@ Multiclass fits use one-vs-one. ``mesh``/``worker_axes`` route the task
 axis through the distributed (shard_map) "MPI" layer; without a mesh the
 tasks are vmapped on the local device (single-GPU configuration of the
 paper).
+
+All Gram computation flows through ``repro.core.kernel_engine`` —
+``engine`` picks the backend ("auto" | "dense" | "chunked" | "pallas" or
+a full ``EngineConfig``). After ``fit`` the model keeps only the support
+vectors (alpha > 0) for serving: ``decision_function`` cost scales with
+#SV, not with the training-set size.
 """
 from __future__ import annotations
 
@@ -20,7 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import dist, gd, kernels as K, ovo, smo
+from repro.core import dist, gd, kernel_engine as KE, kernels as K, ovo, smo
+
+_SV_EPS = 1e-8
 
 
 class SVC:
@@ -29,16 +38,30 @@ class SVC:
                  tol: float = 1e-3, max_iter: int = 100_000,
                  solver: str = "smo", gd_lr: float = 0.01,
                  gd_steps: int = 300,
+                 engine: str | KE.EngineConfig = "auto",
+                 shrink_every: int = 0,
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",)):
         self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
                                             degree=degree, coef0=coef0)
-        self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter)
+        self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter,
+                                     shrink_every=shrink_every)
         self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
         self.solver = solver
+        self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
+                           else KE.EngineConfig(backend=engine))
         self.mesh = mesh
         self.worker_axes = worker_axes
         self._fitted = False
+
+    def _serving_engine(self, sv: jax.Array) -> KE.KernelEngine:
+        """Engine bound to the compacted SV set; serving never needs the
+        (sv, sv) training Gram, so dense/auto degrade to chunked."""
+        backend = ("pallas" if self.engine_cfg.backend == "pallas"
+                   else "chunked")
+        return KE.make_engine(
+            sv, self.kernel_params,
+            dataclasses.replace(self.engine_cfg, backend=backend))
 
     # ------------------------------------------------------------------ fit
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVC":
@@ -50,24 +73,31 @@ class SVC:
         self.classes_ = classes
         if len(classes) == 2:
             yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
+            ecfg = self.engine_cfg
             if self.solver == "smo":
                 r = jax.jit(
                     lambda xx, yv: smo.binary_smo(
-                        xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params)
+                        xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params,
+                        engine=ecfg)
                 )(jnp.asarray(x), jnp.asarray(yy))
                 self.n_iter_ = int(r.n_iter)
                 self.converged_ = bool(r.converged)
             else:
                 r = jax.jit(
                     lambda xx, yv: gd.binary_gd(
-                        xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params)
+                        xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params,
+                        engine=ecfg)
                 )(jnp.asarray(x), jnp.asarray(yy))
                 self.n_iter_ = int(r.n_iter)
                 self.converged_ = True
             self._binary = True
-            self._x, self._y = x, yy
             self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
-            self.support_ = np.where(self.alpha_ > 1e-8)[0]
+            # serving state: compacted support-vector set only
+            sv = self.alpha_ > _SV_EPS
+            self.support_ = np.where(sv)[0]
+            self.n_support_ = int(sv.sum())
+            self.support_vectors_ = x[sv]
+            self.dual_coef_ = (self.alpha_ * yy)[sv].astype(np.float32)
         else:
             n_workers = 1
             if self.mesh is not None:
@@ -78,40 +108,59 @@ class SVC:
                 fit = dist.distributed_ovo_fit(
                     tasks, self.mesh, self.worker_axes, solver=self.solver,
                     smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
-                    kernel=self.kernel_params)
+                    kernel=self.kernel_params, engine=self.engine_cfg)
             else:
                 fit = dist.vmapped_ovo_fit(
                     tasks, solver=self.solver, smo_cfg=self.smo_cfg,
-                    gd_cfg=self.gd_cfg, kernel=self.kernel_params)
+                    gd_cfg=self.gd_cfg, kernel=self.kernel_params,
+                    engine=self.engine_cfg)
             self._binary = False
             self._tasks = tasks
             self._fit = jax.tree.map(np.asarray, fit)
             self.n_iter_ = int(np.max(self._fit.n_iter))
             self.converged_ = bool(np.all(
                 self._fit.converged[:ovo.n_binary_tasks(len(classes))]))
+            self._compact_tasks()
         self._fitted = True
         return self
+
+    def _compact_tasks(self) -> None:
+        """Per-task SV compaction: keep only alpha > 0 rows (padded with
+        coef = 0 rows up to the widest task, so one vmapped program serves
+        every task at #SV cost instead of n_task cost)."""
+        alpha = self._fit.alpha                       # (C, n_task)
+        coef = (alpha * self._tasks.y * self._tasks.mask).astype(np.float32)
+        sv_mask = (alpha > _SV_EPS) & self._tasks.mask
+        width = max(1, int(sv_mask.sum(axis=1).max()))
+        c_total, _, d = self._tasks.x.shape
+        sv_x = np.zeros((c_total, width, d), np.float32)
+        sv_coef = np.zeros((c_total, width), np.float32)
+        for t in range(c_total):
+            idx = np.flatnonzero(sv_mask[t])
+            sv_x[t, :len(idx)] = self._tasks.x[t, idx]
+            sv_coef[t, :len(idx)] = coef[t, idx]
+        self.n_support_ = sv_mask.sum(axis=1).astype(np.int64)
+        self._sv_x, self._sv_coef = sv_x, sv_coef
 
     # ------------------------------------------------------------- predict
     def decision_function(self, xt: np.ndarray) -> np.ndarray:
         assert self._fitted
         xt = jnp.asarray(np.asarray(xt, np.float32))
         if self._binary:
-            df = smo.decision_function(
-                jnp.asarray(self._x), jnp.asarray(self._y),
-                jnp.asarray(self.alpha_), self.b_, xt,
-                kernel=self.kernel_params)
+            if self.n_support_ == 0:  # degenerate fit: constant decision
+                return np.full(xt.shape[0], self.b_, np.float32)
+            eng = self._serving_engine(jnp.asarray(self.support_vectors_))
+            df = eng.decide(xt, jnp.asarray(self.dual_coef_), self.b_)
             return np.asarray(df)
-        # (C, n_test) stacked binary decisions
+        # (C, n_test) stacked binary decisions over compacted SV sets
         gram_fn = K.make_gram_fn(self.kernel_params)
 
-        def one(xtask, ytask, alpha, b):
-            kmat = gram_fn(xt, xtask)
-            return kmat @ (alpha * ytask) + b
+        def one(sv, coef, b):
+            kmat = gram_fn(xt, sv)
+            return kmat @ coef + b
 
-        df = jax.vmap(one)(jnp.asarray(self._tasks.x),
-                           jnp.asarray(self._tasks.y),
-                           jnp.asarray(self._fit.alpha),
+        df = jax.vmap(one)(jnp.asarray(self._sv_x),
+                           jnp.asarray(self._sv_coef),
                            jnp.asarray(self._fit.b))
         return np.asarray(df)
 

@@ -133,11 +133,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :sq]
 
 
-def gram_row_fn(*, gamma: float, block: int = 128,
+def gram_row_fn(*, gamma: float, block: int = 128, mode: str = "rbf",
                 interpret: bool | None = None):
     """``(X, z) -> K(X, z)`` single-row closure for the SMO f-cache update
-    (the on-the-fly, O(n d)-memory mode)."""
+    (the on-the-fly, O(n d)-memory mode used by the chunked/Pallas
+    ``KernelEngine`` backends; ``mode`` mirrors ``rbf_gram``)."""
     def row(x, z):
-        return rbf_gram(x, z[None, :], gamma=gamma, block_n=block,
-                        block_m=128, interpret=interpret)[:, 0]
+        return rbf_gram(x, z[None, :], gamma=gamma, mode=mode,
+                        block_n=block, block_m=128,
+                        interpret=interpret)[:, 0]
     return row

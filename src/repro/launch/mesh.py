@@ -24,3 +24,13 @@ def make_local_mesh(n_workers: int = 1, axis: str = "workers"):
     """Small mesh over however many (possibly forced-host) devices exist —
     used by tests and the SVM distributed examples."""
     return jax.make_mesh((n_workers,), (axis,))
+
+
+def set_mesh(mesh):
+    """Version-compat ``jax.set_mesh``: jax >= 0.6 has the top-level
+    context manager; on 0.4/0.5 the Mesh object itself is the context
+    manager that installs the physical mesh."""
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh

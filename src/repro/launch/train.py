@@ -92,7 +92,8 @@ def main(argv=None):
     t0 = time.time()
     it = token_batches(vocab_size=cfg.vocab_size, batch=args.batch,
                        seq_len=args.seq, n_batches=args.steps, seed=1)
-    ctx = jax.set_mesh(mesh) if mesh is not None else None
+    from repro.launch.mesh import set_mesh
+    ctx = set_mesh(mesh) if mesh is not None else None
     if ctx:
         ctx.__enter__()
     try:

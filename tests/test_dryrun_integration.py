@@ -14,6 +14,7 @@ _SCRIPT = textwrap.dedent("""
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs.base import get_config, reduced, INPUT_SHAPES
+    from repro.launch.mesh import set_mesh
     from repro.models.model import Model, abstract_init
     from repro.sharding import rules
     from repro.roofline.collect import collective_bytes
@@ -37,7 +38,7 @@ _SCRIPT = textwrap.dedent("""
     def fwd(p, b):
         return model.forward(p, b)[0]
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(fwd).lower(params_shapes, batch)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()

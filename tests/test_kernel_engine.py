@@ -1,0 +1,286 @@
+"""KernelEngine: backend equivalence, LRU row cache, adaptive shrinking,
+SV-compacted serving, and the large-n chunked training regression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import kernel_engine as KE
+from repro.core import kernels as K, smo
+from repro.core.svm import SVC
+from repro.data import load_iris, make_blobs, normalize
+
+
+def _small_problem(n_per=48, d=6, seed=3):
+    x, y = make_blobs(n_per, 2, d, sep=1.5, seed=seed)
+    yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+    return normalize(x), yy
+
+
+def _engines(x, kp, slots=8):
+    cfg = KE.EngineConfig(cache_slots=slots, chunk=64, dense_limit=4096)
+    return {
+        "dense": KE.DenseKernelEngine(x, kp, cfg),
+        "chunked": KE.ChunkedKernelEngine(x, kp, cfg),
+        "pallas": KE.PallasKernelEngine(x, kp, cfg),
+    }
+
+
+class TestBackendEquivalence:
+    """dense / chunked / pallas must expose the SAME Gram through every
+    interface method."""
+
+    def test_all_methods_agree(self):
+        x, _ = _small_problem()
+        xj = jnp.asarray(x)
+        kp = K.resolve_gamma(K.KernelParams(), xj)
+        engines = _engines(xj, kp)
+        ref = np.asarray(engines["dense"].full())
+        rows = jnp.asarray([3, 17, 40])
+        cols = jnp.asarray([0, 9, 55, 80])
+        zt = xj[:13] * 1.1  # off-training-grid test block
+        coef = jnp.asarray(np.random.default_rng(0).normal(
+            size=(x.shape[0],)).astype(np.float32))
+        for name, eng in engines.items():
+            tol = dict(rtol=3e-5, atol=3e-5)
+            np.testing.assert_allclose(np.asarray(eng.full()), ref,
+                                       err_msg=name, **tol)
+            np.testing.assert_allclose(np.asarray(eng.diag()),
+                                       np.diag(ref), err_msg=name, **tol)
+            r, _ = eng.row(jnp.int32(7), None)
+            np.testing.assert_allclose(np.asarray(r), ref[7],
+                                       err_msg=name, **tol)
+            np.testing.assert_allclose(
+                np.asarray(eng.block(rows, cols)),
+                ref[np.asarray(rows)][:, np.asarray(cols)],
+                err_msg=name, **tol)
+            np.testing.assert_allclose(np.asarray(eng.matvec(coef)),
+                                       ref @ np.asarray(coef),
+                                       err_msg=name, rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(
+                np.asarray(eng.cross(zt)),
+                np.asarray(engines["dense"].cross(zt)),
+                err_msg=name, **tol)
+            np.testing.assert_allclose(
+                np.asarray(eng.decide(zt, coef, 0.25)),
+                np.asarray(engines["dense"].cross(zt)) @ np.asarray(coef)
+                + 0.25, err_msg=name, rtol=2e-4, atol=2e-4)
+
+    def test_auto_backend_resolution(self):
+        x, _ = _small_problem()
+        xj = jnp.asarray(x)
+        kp = K.KernelParams(gamma=0.5)
+        small = KE.make_engine(xj, kp, KE.EngineConfig(dense_limit=1000))
+        assert isinstance(small, KE.DenseKernelEngine)
+        big = KE.make_engine(xj, kp, KE.EngineConfig(dense_limit=10))
+        assert isinstance(big, KE.ChunkedKernelEngine)
+        with pytest.raises(ValueError):
+            KE.make_engine(xj, kp, "no_such_backend")
+
+    def test_chunked_full_guard(self):
+        """The chunked backend must REFUSE to materialize (n, n) beyond
+        dense_limit — that is its whole reason to exist."""
+        x, _ = _small_problem()
+        eng = KE.ChunkedKernelEngine(jnp.asarray(x),
+                                     K.KernelParams(gamma=0.5),
+                                     KE.EngineConfig(dense_limit=10))
+        with pytest.raises(RuntimeError, match="refusing to materialize"):
+            eng.full()
+
+
+class TestRowCache:
+    def test_hit_miss_and_lru_eviction(self):
+        x, _ = _small_problem()
+        kp = K.KernelParams(gamma=0.5)
+        eng = KE.ChunkedKernelEngine(jnp.asarray(x), kp,
+                                     KE.EngineConfig(cache_slots=4))
+        ref = np.asarray(KE.DenseKernelEngine(jnp.asarray(x), kp).full())
+        cache = eng.init_cache()
+        r, cache = eng.row(jnp.int32(3), cache)      # miss
+        np.testing.assert_allclose(np.asarray(r), ref[3], rtol=1e-5,
+                                   atol=1e-6)
+        r, cache = eng.row(jnp.int32(3), cache)      # hit
+        np.testing.assert_allclose(np.asarray(r), ref[3], rtol=1e-5,
+                                   atol=1e-6)
+        assert int(cache.hits) == 1 and int(cache.misses) == 1
+        # fill the remaining 3 slots, then one more: row 3 (LRU) evicted
+        for i in (10, 11, 12, 13):
+            r, cache = eng.row(jnp.int32(i), cache)
+            np.testing.assert_allclose(np.asarray(r), ref[i], rtol=1e-5,
+                                       atol=1e-6)
+        assert int(cache.misses) == 5
+        assert 3 not in np.asarray(cache.keys)
+        assert set(np.asarray(cache.keys)) == {10, 11, 12, 13}
+        # evicted row still served correctly (recomputed, counts a miss)
+        r, cache = eng.row(jnp.int32(3), cache)
+        np.testing.assert_allclose(np.asarray(r), ref[3], rtol=1e-5,
+                                   atol=1e-6)
+        assert int(cache.misses) == 6
+
+    def test_cache_disabled(self):
+        x, _ = _small_problem()
+        eng = KE.ChunkedKernelEngine(jnp.asarray(x),
+                                     K.KernelParams(gamma=0.5),
+                                     KE.EngineConfig(cache_slots=0))
+        assert eng.init_cache() is None
+
+
+class TestShrinking:
+    def test_shrinking_matches_plain_on_iris(self):
+        x, y = load_iris()
+        x = normalize(x)
+        sel = y != 2
+        x = x[sel]
+        yy = np.where(y[sel] == 0, 1.0, -1.0).astype(np.float32)
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        r0 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp)
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                            engine="chunked",
+                            cfg=smo.SMOConfig(shrink_every=2))
+        assert bool(r1.converged)
+        np.testing.assert_allclose(np.asarray(r0.alpha),
+                                   np.asarray(r1.alpha), rtol=1e-3,
+                                   atol=1e-4)
+        assert abs(float(r0.b) - float(r1.b)) < 1e-2
+
+    def test_unshrunk_kkt_recheck_gates_convergence(self):
+        """An aggressive shrink schedule must still only report
+        convergence after the FULL (un-shrunk) KKT check passes."""
+        x, y = make_blobs(150, 2, 10, sep=0.8, seed=3)
+        yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+        x = normalize(x)
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        r = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                           engine="chunked",
+                           cfg=smo.SMOConfig(shrink_every=1,
+                                             shrink_slack=0.0))
+        assert bool(r.converged)
+        # reported gap comes from the final un-shrunk selection
+        assert float(r.gap) <= 2.1e-3
+
+
+class TestDenseChunkedAgreement:
+    """ISSUE 1 acceptance: chunked+shrinking agrees with the dense engine
+    on n <= 2k — same support set, |b| diff < 1e-2, equal accuracy."""
+
+    def test_n2048_same_solution(self):
+        x, y = make_blobs(1024, 2, 8, sep=2.5, seed=11)
+        yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+        x = normalize(x)
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        xj, yj = jnp.asarray(x), jnp.asarray(yy)
+        rd = jax.jit(lambda a, b: smo.binary_smo(
+            a, b, cfg=smo.SMOConfig(), kernel=kp, engine="dense"))(xj, yj)
+        rc = jax.jit(lambda a, b: smo.binary_smo(
+            a, b, cfg=smo.SMOConfig(shrink_every=4), kernel=kp,
+            engine=KE.EngineConfig(backend="chunked", cache_slots=16)))(
+                xj, yj)
+        assert bool(rd.converged) and bool(rc.converged)
+        sv_d = np.asarray(rd.alpha) > 1e-8
+        sv_c = np.asarray(rc.alpha) > 1e-8
+        assert (sv_d == sv_c).all(), "support sets differ"
+        assert abs(float(rd.b) - float(rc.b)) < 1e-2
+        eng = KE.make_engine(xj, kp, "chunked")
+        acc_d = np.mean(np.sign(np.asarray(eng.decide(
+            xj, jnp.asarray(np.asarray(rd.alpha) * yy), rd.b))) == yy)
+        acc_c = np.mean(np.sign(np.asarray(eng.decide(
+            xj, jnp.asarray(np.asarray(rc.alpha) * yy), rc.b))) == yy)
+        assert acc_d == acc_c
+
+
+class TestLargeN:
+    """ISSUE 1 acceptance: n = 16,384 RBF training with the chunked +
+    shrinking engine, never materializing the (n, n) Gram (the engine
+    would raise if asked; 16384^2 floats = 1 GiB the dense path needs)."""
+
+    def test_n16384_trains_without_full_gram(self):
+        n_per = 8192
+        x, y = make_blobs(n_per, 2, 8, sep=4.0, seed=7)
+        yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+        x = normalize(x)
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        ecfg = KE.EngineConfig(backend="chunked", cache_slots=16,
+                               chunk=2048)
+        cfg = smo.SMOConfig(max_iter=30_000, shrink_every=4,
+                            selection="second")
+        r = jax.jit(lambda a, b: smo.binary_smo(
+            a, b, cfg=cfg, kernel=kp, engine=ecfg))(
+                jnp.asarray(x), jnp.asarray(yy))
+        assert bool(r.converged), f"gap={float(r.gap)}"
+        alpha = np.asarray(r.alpha)
+        assert alpha.min() >= 0.0 and alpha.max() <= 1.0 + 1e-6
+        assert abs(float(np.sum(alpha * yy))) < 1e-2
+        # the engine refuses the (n, n) materialization outright
+        eng = KE.make_engine(jnp.asarray(x), kp, ecfg)
+        with pytest.raises(RuntimeError, match="refusing to materialize"):
+            eng.full()
+        # chunked serving on a subsample: the trained margin classifies
+        sub = np.random.default_rng(0).choice(len(yy), 1024, replace=False)
+        df = np.asarray(eng.decide(jnp.asarray(x[sub]),
+                                   jnp.asarray(alpha * yy), r.b))
+        assert np.mean(np.sign(df) == yy[sub]) >= 0.99
+
+
+class TestDeprecationShims:
+    """Old gram= / row_fn= / use_pallas plumbing resolves to engines and
+    keeps producing the same solutions."""
+
+    def test_gram_kwarg(self):
+        x, yy = _small_problem()
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        g = K.make_gram_fn(kp)(jnp.asarray(x), jnp.asarray(x))
+        r0 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp)
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                            gram=g)
+        np.testing.assert_allclose(np.asarray(r0.alpha),
+                                   np.asarray(r1.alpha), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_row_fn_kwarg(self):
+        x, yy = _small_problem()
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        gram_fn = K.make_gram_fn(kp)
+        row_fn = lambda xs, z: gram_fn(xs, z[None, :])[:, 0]
+        r0 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                            cfg=smo.SMOConfig(precompute_gram=False))
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                            row_fn=row_fn)
+        np.testing.assert_allclose(np.asarray(r0.alpha),
+                                   np.asarray(r1.alpha), rtol=1e-5,
+                                   atol=1e-6)
+
+
+class TestCompactedServing:
+    def test_binary_svc_serves_from_support_vectors_only(self):
+        x, y = load_iris()
+        x = normalize(x)
+        sel = y != 2
+        clf = SVC(solver="smo").fit(x[sel], y[sel])
+        assert clf.n_support_ == len(clf.support_)
+        assert clf.support_vectors_.shape == (clf.n_support_, x.shape[1])
+        assert 0 < clf.n_support_ < sel.sum()  # actually compacted
+        # compacted decision == full-training-set decision
+        yy = np.where(y[sel] == 0, 1.0, -1.0).astype(np.float32)
+        full = smo.decision_function(
+            jnp.asarray(x[sel]), jnp.asarray(yy),
+            jnp.asarray(clf.alpha_), clf.b_, jnp.asarray(x[sel]),
+            kernel=clf.kernel_params)
+        np.testing.assert_allclose(clf.decision_function(x[sel]),
+                                   np.asarray(full), rtol=1e-4, atol=1e-4)
+        assert clf.score(x[sel], y[sel]) == 1.0
+
+    def test_multiclass_svc_compacts_per_task(self):
+        x, y = load_iris()
+        x = normalize(x)
+        clf = SVC(solver="smo").fit(x, y)
+        n_task = clf._tasks.x.shape[1]
+        assert clf._sv_x.shape[1] < n_task  # strictly fewer rows served
+        assert clf._sv_x.shape[1] == int(np.max(clf.n_support_))
+        assert clf.score(x, y) >= 0.96
+
+    def test_svc_chunked_engine_end_to_end(self):
+        x, y = load_iris()
+        x = normalize(x)
+        ref = SVC(solver="smo").fit(x, y)
+        chk = SVC(solver="smo", engine="chunked", shrink_every=4).fit(x, y)
+        assert chk.score(x, y) == ref.score(x, y)

@@ -144,6 +144,59 @@ class TestSecondOrderSelection:
         assert bool(r.converged)
 
 
+class TestVariantsMatchDenseFirstOrder:
+    """Solver-variant coverage: WSS2 (selection="second") and the
+    on-the-fly row mode (precompute_gram=False) must reach the SAME
+    solution as the dense first-order reference on iris."""
+
+    def _reference(self):
+        x, y = _binary_iris()
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        r0, _ = _fit(x, y, kernel=kp)
+        gram = K.make_gram_fn(kp)(jnp.asarray(x), jnp.asarray(x))
+        return x, y, kp, r0, gram
+
+    def _assert_same_solution(self, x, y, kp, r0, gram, r1):
+        assert bool(r1.converged)
+        assert abs(float(r0.b) - float(r1.b)) < 1e-2
+        o0 = float(smo.dual_objective(jnp.asarray(y), r0.alpha, gram))
+        o1 = float(smo.dual_objective(jnp.asarray(y), r1.alpha, gram))
+        assert abs(o0 - o1) < 0.02 * abs(o0) + 1e-3
+        d0 = np.sign(np.asarray(smo.decision_function(
+            jnp.asarray(x), jnp.asarray(y), r0.alpha, r0.b,
+            jnp.asarray(x), kernel=kp)))
+        d1 = np.sign(np.asarray(smo.decision_function(
+            jnp.asarray(x), jnp.asarray(y), r1.alpha, r1.b,
+            jnp.asarray(x), kernel=kp)))
+        assert (d0 == d1).all()
+
+    def test_wss2_matches_dense_first_order(self):
+        x, y, kp, r0, gram = self._reference()
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(y),
+                            cfg=smo.SMOConfig(selection="second"),
+                            kernel=kp)
+        self._assert_same_solution(x, y, kp, r0, gram, r1)
+
+    def test_on_the_fly_matches_dense_first_order(self):
+        x, y, kp, r0, gram = self._reference()
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(y),
+                            cfg=smo.SMOConfig(precompute_gram=False),
+                            kernel=kp)
+        self._assert_same_solution(x, y, kp, r0, gram, r1)
+        # on-the-fly first-order tracks the dense trajectory exactly
+        np.testing.assert_allclose(np.asarray(r0.alpha),
+                                   np.asarray(r1.alpha), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_wss2_on_the_fly_combination(self):
+        x, y, kp, r0, gram = self._reference()
+        r1 = smo.binary_smo(jnp.asarray(x), jnp.asarray(y),
+                            cfg=smo.SMOConfig(selection="second",
+                                              precompute_gram=False),
+                            kernel=kp)
+        self._assert_same_solution(x, y, kp, r0, gram, r1)
+
+
 class TestMaskPadding:
     def test_padded_samples_inert(self):
         x, y = _binary_iris()

@@ -4,11 +4,14 @@
 
 Emits ``name,us_per_call,derived`` CSV lines per benchmark:
   Table III & V -> bench_binary      (binary SMO vs GD training time)
-  Table IV      -> bench_multiclass  (9-class OvO parallel vs sequential)
+  Table IV      -> bench_multiclass  (9-class OvO parallel vs sequential,
+                                      + bucketed-vs-padded scheduler JSON)
   Table VI      -> bench_portability (same program jit vs eager)
   kernels       -> bench_kernels     (hot-spot roofline estimates)
   beyond-paper  -> bench_large_n     (chunked-engine large-n trajectory,
                                       JSON lines; --only large_n)
+  beyond-paper  -> --only scheduler  (bucketed-vs-padded multiclass
+                                      scheduler JSON alone; CI smoke)
 """
 from __future__ import annotations
 
@@ -21,7 +24,8 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="drop the largest sample sizes")
     ap.add_argument("--only", default="",
-                    help="comma list: binary,multiclass,portability,kernels")
+                    help="comma list: binary,multiclass,portability,"
+                         "kernels; opt-in extras: large_n,scheduler")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -37,8 +41,12 @@ def main(argv=None) -> None:
         bench_binary.main()
     if only is None or "multiclass" in only:
         bench_multiclass.main()
+        bench_multiclass.bucketed(quick=args.quick)
         if not args.quick:
             bench_multiclass.scaling()
+    if only is not None and "scheduler" in only:
+        # the bucketed-vs-padded JSON comparison alone (CI smoke)
+        bench_multiclass.bucketed(quick=args.quick)
     if only is None or "portability" in only:
         bench_portability.main()
     if only is None or "kernels" in only:

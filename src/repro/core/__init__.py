@@ -5,3 +5,8 @@ from repro.core.kernel_engine import (ChunkedKernelEngine,  # noqa: F401
                                       DenseKernelEngine, EngineConfig,
                                       KernelEngine, PallasKernelEngine,
                                       make_engine)
+from repro.core.multiclass import (BinaryTask, Bucket,  # noqa: F401
+                                   MulticlassStrategy, OneVsOneStrategy,
+                                   OneVsRestStrategy, Schedule,
+                                   ScheduleConfig, TaskSet, build_schedule,
+                                   get_strategy, schedule_stats)

@@ -14,6 +14,19 @@ JAX-native mapping:
                           gather out); NO collectives inside the solver
                           loop, exactly the paper's comm profile.
 
+``fit_taskset`` is the general entry point: it consumes a strategy-built
+``repro.core.multiclass.TaskSet`` plus a size-bucketed ``Schedule`` and
+runs ONE vmapped / shard_mapped solver program PER BUCKET, each at its
+own padded width — on imbalanced datasets this replaces the old
+pad-everything-to-the-widest-pair layout whose FLOPs were mostly zeros.
+Worker placement inside each bucket follows the schedule's greedy LPT
+grid rather than blind ``C/P`` striping.
+
+``vmapped_ovo_fit`` / ``distributed_ovo_fit`` survive as shims over
+``fit_taskset``: they convert the legacy padded ``OvOTasks`` stack into
+a TaskSet and run it under a single-bucket ``bucket_by="none"`` schedule
+at the original padded width, preserving the old numerics exactly.
+
 ``sequential_ovo_fit`` is the "Multi-Tensorflow" side: one GD session per
 task, executed one after another (the paper runs multiple TF sessions
 sequentially).
@@ -26,7 +39,7 @@ or Pallas-tiled — is chosen once at the top.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -37,6 +50,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import gd as gd_mod
 from repro.core import kernel_engine as KE
 from repro.core import kernels as K
+from repro.core import multiclass as MC
 from repro.core import smo as smo_mod
 from repro.core.ovo import OvOTasks
 
@@ -85,6 +99,12 @@ def _fit_many_smo(x, y, mask, *, cfg: smo_mod.SMOConfig,
                   engine: Optional[KE.EngineConfig | str] = None) -> OvOFit:
     """vmap of the binary solver over a stacked task axis."""
     engine = _batched_engine(engine)
+    if cfg.shrink_every:
+        # adaptive shrinking targets the scalar-jit path: under vmap the
+        # un-shrink lax.cond lowers to select and would run its chunked
+        # matvec at EVERY convergence check of EVERY task (see the
+        # kernel_engine module docs) — force it off for batched dispatch
+        cfg = dataclasses.replace(cfg, shrink_every=0)
 
     def one(xt, yt, mt):
         r = smo_mod.binary_smo(xt, yt, mt, cfg=cfg, kernel=kernel,
@@ -104,6 +124,183 @@ def _fit_many_gd(x, y, mask, *, cfg: gd_mod.GDConfig,
     return jax.vmap(one)(x, y, mask)
 
 
+@partial(jax.jit, static_argnames=("solver", "smo_cfg", "gd_cfg",
+                                   "kernel", "engine"))
+def _fit_many(x, y, mask, *, solver, smo_cfg, gd_cfg, kernel, engine):
+    """Jitted stacked fit with all configs static: one compiled program
+    per (config, bucket SHAPE) pair, shared across fit_taskset calls —
+    a fresh ``jax.jit(partial(...))`` per call would retrace every
+    bucket on every fit."""
+    if solver == "smo":
+        return _fit_many_smo(x, y, mask, cfg=smo_cfg, kernel=kernel,
+                             engine=engine)
+    return _fit_many_gd(x, y, mask, cfg=gd_cfg, kernel=kernel,
+                        engine=engine)
+
+
+@lru_cache(maxsize=64)
+def _sharded_fit_many(mesh, worker_axes, solver, smo_cfg, gd_cfg, kernel,
+                      engine):
+    """shard_map-wrapped jitted fit, cached per (mesh, config): jit keys
+    its trace cache on the callable object, so rebuilding the wrapper
+    inside the bucket loop would recompile every bucket on every call."""
+    fit_local = partial(_fit_many, solver=solver, smo_cfg=smo_cfg,
+                        gd_cfg=gd_cfg, kernel=kernel, engine=engine)
+    spec = P(worker_axes)
+    return jax.jit(_shard_map(fit_local, mesh, (spec, spec, spec),
+                              OvOFit(spec, spec, spec, spec)))
+
+
+class TaskSetFit(NamedTuple):
+    """Host-side results for a fitted TaskSet. Row ``t`` of ``alpha`` is
+    valid up to ``sizes[t]`` (tasks were solved at their bucket width;
+    storage pads to the widest task — cheap, it's only (C, max_k))."""
+
+    alpha: np.ndarray      # (C, max_k) float32
+    b: np.ndarray          # (C,) float32
+    n_iter: np.ndarray     # (C,) int
+    converged: np.ndarray  # (C,) bool
+    sizes: np.ndarray      # (C,) int true task lengths
+
+
+def _bucket_arrays(taskset: MC.TaskSet, bucket: MC.Bucket):
+    """Stack one bucket's tasks into (P * slots, width, d) solver inputs,
+    rows ordered so a worker-axis shard gives worker p exactly the tasks
+    the LPT layout assigned it. Dummy slots (-1) are fully masked."""
+    ids = bucket.task_ids.reshape(-1)
+    d = taskset.tasks[0].x.shape[1]
+    xt = np.zeros((len(ids), bucket.width, d), np.float32)
+    yt = np.zeros((len(ids), bucket.width), np.float32)
+    mk = np.zeros((len(ids), bucket.width), bool)
+    for s, t in enumerate(ids):
+        if t < 0:
+            continue
+        task = taskset.tasks[t]
+        k = task.size
+        xt[s, :k] = task.x
+        yt[s, :k] = task.y
+        mk[s, :k] = True
+    return xt, yt, mk
+
+
+def fit_taskset(taskset: MC.TaskSet,
+                schedule: Optional[MC.Schedule] = None,
+                *,
+                mesh: Optional[Mesh] = None,
+                worker_axes: tuple[str, ...] = ("workers",),
+                solver: str = "smo",
+                smo_cfg: smo_mod.SMOConfig = smo_mod.SMOConfig(),
+                gd_cfg: gd_mod.GDConfig = gd_mod.GDConfig(),
+                kernel: K.KernelParams = K.KernelParams(),
+                engine: Optional[KE.EngineConfig | str] = None,
+                schedule_cfg: Optional[MC.ScheduleConfig] = None
+                ) -> TaskSetFit:
+    """Fit every binary task of ``taskset``, one solver program per
+    schedule bucket.
+
+    Without ``mesh`` each bucket is vmapped on the local device; with a
+    mesh the bucket's slot axis is sharded over ``worker_axes`` via
+    shard_map (each worker receives the contiguous run of slots the LPT
+    layout placed on it). ``schedule`` defaults to a fresh pow2-bucketed
+    build; pass ``schedule_cfg`` to tune bucketing without prebuilding.
+    """
+    n_workers = 1
+    if mesh is not None:
+        n_workers = int(np.prod([mesh.shape[a] for a in worker_axes]))
+    if schedule is None:
+        cfg = schedule_cfg if schedule_cfg is not None else MC.ScheduleConfig()
+        cfg = dataclasses.replace(cfg, n_workers=n_workers)
+        schedule = MC.build_schedule(taskset.sizes, cfg)
+    if schedule.n_workers != n_workers:
+        raise ValueError(
+            f"schedule laid out for {schedule.n_workers} workers but the "
+            f"mesh provides {n_workers}")
+
+    if solver not in ("smo", "gd"):
+        raise ValueError(f"unknown solver {solver!r}")
+    if isinstance(engine, str):
+        engine = KE.EngineConfig(backend=engine)
+    cfgs = dict(solver=solver, smo_cfg=smo_cfg, gd_cfg=gd_cfg,
+                kernel=kernel, engine=engine)
+
+    sizes = taskset.sizes
+    c = taskset.n_tasks
+    alpha = np.zeros((c, int(sizes.max())), np.float32)
+    b = np.zeros(c, np.float32)
+    n_iter = np.zeros(c, np.int64)
+    converged = np.zeros(c, bool)
+
+    for bucket in schedule.buckets:
+        xt, yt, mk = _bucket_arrays(taskset, bucket)
+        if mesh is None:
+            out = _fit_many(jnp.asarray(xt), jnp.asarray(yt),
+                            jnp.asarray(mk), **cfgs)
+        else:
+            fit = _sharded_fit_many(mesh, tuple(worker_axes), **cfgs)
+            sh = NamedSharding(mesh, P(worker_axes))
+            out = fit(jax.device_put(jnp.asarray(xt), sh),
+                      jax.device_put(jnp.asarray(yt), sh),
+                      jax.device_put(jnp.asarray(mk), sh))
+        out = jax.tree.map(np.asarray, out)
+        for s, t in enumerate(bucket.task_ids.reshape(-1)):
+            if t < 0:
+                continue
+            k = int(sizes[t])
+            alpha[t, :k] = out.alpha[s, :k]
+            b[t] = out.b[s]
+            n_iter[t] = out.n_iter[s]
+            converged[t] = out.converged[s]
+    return TaskSetFit(alpha=alpha, b=b, n_iter=n_iter, converged=converged,
+                      sizes=sizes)
+
+
+def taskset_from_ovo(tasks: OvOTasks) -> MC.TaskSet:
+    """Legacy padded ``OvOTasks`` stack -> variable-length TaskSet.
+
+    Fully-masked padding tasks (the ``pad_tasks_to`` dummies) are
+    dropped — the scheduler re-creates worker-count padding as dummy
+    slots on its own."""
+    cls_index = {c: i for i, c in enumerate(tasks.classes)}
+    out = []
+    for t in range(tasks.x.shape[0]):
+        k = int(tasks.mask[t].sum())
+        if k == 0:
+            continue
+        assert tasks.mask[t, :k].all(), "OvOTasks mask must be a prefix"
+        a, b = tasks.pairs[t]
+        out.append(MC.BinaryTask(
+            x=np.asarray(tasks.x[t, :k], np.float32),
+            y=np.asarray(tasks.y[t, :k], np.float32),
+            pos=cls_index[a], neg=cls_index[b]))
+    return MC.TaskSet(tasks=tuple(out), classes=tasks.classes,
+                      strategy="ovo")
+
+
+def _ovo_fit_shim(tasks: OvOTasks, mesh, worker_axes, *, solver, smo_cfg,
+                  gd_cfg, kernel, engine) -> OvOFit:
+    """Run a legacy OvOTasks stack through fit_taskset at the original
+    padded width (single bucket), re-expanding results to the old
+    (c_total, n_task) layout."""
+    c_total, n_task = tasks.y.shape
+    taskset = taskset_from_ovo(tasks)
+    fit = fit_taskset(
+        taskset, mesh=mesh, worker_axes=worker_axes, solver=solver,
+        smo_cfg=smo_cfg, gd_cfg=gd_cfg, kernel=kernel, engine=engine,
+        schedule_cfg=MC.ScheduleConfig(bucket_by="none", pad_width=n_task))
+    c_real = taskset.n_tasks
+    alpha = np.zeros((c_total, n_task), np.float32)
+    alpha[:c_real, :fit.alpha.shape[1]] = fit.alpha
+    b = np.zeros(c_total, np.float32)
+    b[:c_real] = fit.b
+    n_iter = np.zeros(c_total, np.int32)
+    n_iter[:c_real] = fit.n_iter
+    converged = np.ones(c_total, bool)  # dummy tasks trivially converge
+    converged[:c_real] = fit.converged
+    return OvOFit(alpha=jnp.asarray(alpha), b=jnp.asarray(b),
+                  n_iter=jnp.asarray(n_iter),
+                  converged=jnp.asarray(converged))
+
+
 def distributed_ovo_fit(tasks: OvOTasks,
                         mesh: Mesh,
                         worker_axes: tuple[str, ...] = ("workers",),
@@ -114,7 +311,8 @@ def distributed_ovo_fit(tasks: OvOTasks,
                         kernel: K.KernelParams = K.KernelParams(),
                         engine: Optional[KE.EngineConfig | str] = None
                         ) -> OvOFit:
-    """Fit all OvO tasks, task axis sharded over ``worker_axes`` of ``mesh``.
+    """Legacy shim: fit a padded OvO stack, task axis sharded over
+    ``worker_axes`` of ``mesh``, via ``fit_taskset``.
 
     The task axis length must be divisible by the total worker count
     (use ``build_tasks(pad_tasks_to=n_workers)``).
@@ -125,27 +323,9 @@ def distributed_ovo_fit(tasks: OvOTasks,
         raise ValueError(
             f"task count {c_total} not divisible by {n_workers} workers; "
             f"build tasks with pad_tasks_to={n_workers}")
-
-    if solver == "smo":
-        fit_local = partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel,
-                            engine=engine)
-    elif solver == "gd":
-        fit_local = partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel,
-                            engine=engine)
-    else:
-        raise ValueError(f"unknown solver {solver!r}")
-
-    spec = P(worker_axes)
-    fit = _shard_map(fit_local, mesh,
-                     (spec, spec, spec),
-                     OvOFit(spec, spec, spec, spec))
-    fit = jax.jit(fit)
-
-    sh = NamedSharding(mesh, spec)
-    x = jax.device_put(jnp.asarray(tasks.x), sh)
-    y = jax.device_put(jnp.asarray(tasks.y), sh)
-    mask = jax.device_put(jnp.asarray(tasks.mask), sh)
-    return fit(x, y, mask)
+    return _ovo_fit_shim(tasks, mesh, worker_axes, solver=solver,
+                         smo_cfg=smo_cfg, gd_cfg=gd_cfg, kernel=kernel,
+                         engine=engine)
 
 
 def vmapped_ovo_fit(tasks: OvOTasks, *, solver: str = "smo",
@@ -154,14 +334,11 @@ def vmapped_ovo_fit(tasks: OvOTasks, *, solver: str = "smo",
                     kernel: K.KernelParams = K.KernelParams(),
                     engine: Optional[KE.EngineConfig | str] = None
                     ) -> OvOFit:
-    """Single-device stacked fit (no mesh) — the CUDA-only configuration."""
-    x, y, mask = (jnp.asarray(tasks.x), jnp.asarray(tasks.y),
-                  jnp.asarray(tasks.mask))
-    if solver == "smo":
-        return jax.jit(partial(_fit_many_smo, cfg=smo_cfg, kernel=kernel,
-                               engine=engine))(x, y, mask)
-    return jax.jit(partial(_fit_many_gd, cfg=gd_cfg, kernel=kernel,
-                           engine=engine))(x, y, mask)
+    """Legacy shim: single-device stacked fit (no mesh) — the CUDA-only
+    configuration — via ``fit_taskset``."""
+    return _ovo_fit_shim(tasks, None, ("workers",), solver=solver,
+                         smo_cfg=smo_cfg, gd_cfg=gd_cfg, kernel=kernel,
+                         engine=engine)
 
 
 def sequential_ovo_fit(tasks: OvOTasks, *, solver: str = "gd",

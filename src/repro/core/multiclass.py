@@ -1,0 +1,353 @@
+"""Multiclass strategy layer: task builders + the size-bucketed scheduler.
+
+The paper's MPI layer (Fig. 4) statically partitions C = m(m-1)/2
+one-vs-one subproblems over P workers, N = C/P each. The original
+reproduction went one step further in the wrong direction: it padded
+*every* task to the widest class pair and vmapped one giant stacked
+program, so on imbalanced datasets most FLOPs are spent multiplying
+zeros — the load-imbalance limiter that *Parallel Support Vector
+Machines in Practice* (arXiv:1404.1066) identifies, attacked here the
+way *Fast SVMs Using Parallel Adaptive Shrinking* (arXiv:1406.5161)
+attacks it: work-aware distribution.
+
+This module owns two orthogonal pieces:
+
+Strategies (``MulticlassStrategy``)
+    Turn an (x, y) multiclass problem into a ``TaskSet`` of independent
+    binary subproblems, and turn the stacked binary decision values back
+    into class predictions.
+
+    * ``OneVsOneStrategy``  — C = m(m-1)/2 pairwise tasks; predict by
+      majority ``vote`` (LIBSVM convention) or summed-``margin``.
+    * ``OneVsRestStrategy`` — m tasks, class c vs the rest; predict by
+      argmax of the decision values.
+
+Scheduler (``build_schedule``)
+    Group the variable-length binary tasks into a small number of shape
+    buckets (next-power-of-two task lengths by default), so each bucket
+    is vmapped at its own width instead of everything padding to the
+    global max, and lay tasks out over mesh workers with a greedy
+    longest-processing-time (LPT) assignment instead of blind ``C/P``
+    striping. ``schedule_stats`` reports how many of the scheduled
+    FLOPs are padding — the number the bucketed scheduler drives down.
+
+``repro.core.dist.fit_taskset`` consumes (TaskSet, Schedule) and runs
+one vmapped / shard_mapped solver program per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- tasks
+class BinaryTask(NamedTuple):
+    """One binary subproblem: samples, ±1 labels, and vote routing.
+
+    ``pos``/``neg`` are indices into ``TaskSet.classes``: a positive
+    decision credits ``pos``, a negative one credits ``neg`` (−1 for the
+    OvR "rest" pseudo-class, which never receives credit).
+    """
+
+    x: np.ndarray    # (k, d) float32
+    y: np.ndarray    # (k,)   float32 in {+1, -1}
+    pos: int
+    neg: int
+
+    @property
+    def size(self) -> int:
+        return self.x.shape[0]
+
+
+class TaskSet(NamedTuple):
+    """Strategy-agnostic bundle of binary tasks (the unit ``fit_taskset``
+    consumes). Tasks are variable-length; padding is the *scheduler's*
+    decision, not the builder's."""
+
+    tasks: tuple[BinaryTask, ...]
+    classes: np.ndarray   # (m,) sorted unique labels
+    strategy: str         # "ovo" | "ovr"
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.array([t.size for t in self.tasks], np.int64)
+
+    @property
+    def pairs(self) -> np.ndarray:
+        """(C, 2) class-index array: column 0 credited on decision > 0,
+        column 1 on decision < 0 (−1 = no credit)."""
+        return np.array([(t.pos, t.neg) for t in self.tasks], np.int64)
+
+
+# ----------------------------------------------------------------- strategies
+class MulticlassStrategy:
+    """Interface: build the TaskSet, then decide classes from stacked
+    binary decision values."""
+
+    name = "base"
+
+    def build_taskset(self, x: np.ndarray, y: np.ndarray) -> TaskSet:
+        raise NotImplementedError
+
+    def decide(self, df: jnp.ndarray, taskset: TaskSet,
+               decision: str = "vote") -> jnp.ndarray:
+        """df: (C, n_test) decision values -> (n_test,) class indices."""
+        raise NotImplementedError
+
+
+def _classes_and_members(x, y):
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y)
+    classes = np.unique(y)
+    if len(classes) < 2:
+        raise ValueError("need at least 2 classes")
+    members = {i: np.where(y == c)[0] for i, c in enumerate(classes)}
+    return x, classes, members
+
+
+class OneVsOneStrategy(MulticlassStrategy):
+    """C = m(m-1)/2 pairwise tasks (the paper's decomposition)."""
+
+    name = "ovo"
+
+    def build_taskset(self, x, y) -> TaskSet:
+        x, classes, members = _classes_and_members(x, y)
+        tasks = []
+        m = len(classes)
+        for a in range(m):
+            for b in range(a + 1, m):
+                ia, ib = members[a], members[b]
+                xt = np.concatenate([x[ia], x[ib]], axis=0)
+                yt = np.concatenate([np.ones(len(ia), np.float32),
+                                     -np.ones(len(ib), np.float32)])
+                tasks.append(BinaryTask(x=xt, y=yt, pos=a, neg=b))
+        return TaskSet(tasks=tuple(tasks), classes=classes,
+                       strategy=self.name)
+
+    def decide(self, df, taskset, decision="vote"):
+        pairs = taskset.pairs
+        m = len(taskset.classes)
+        if decision == "margin":
+            return margin_decision(df, pairs, m)
+        if decision == "vote":
+            return vote_decision(df, pairs, m)
+        raise ValueError(f"unknown OvO decision {decision!r}; "
+                         "expected 'vote' or 'margin'")
+
+
+class OneVsRestStrategy(MulticlassStrategy):
+    """m tasks, class c (+1) vs all others (−1); argmax decision."""
+
+    name = "ovr"
+
+    def build_taskset(self, x, y) -> TaskSet:
+        x, classes, members = _classes_and_members(x, y)
+        tasks = []
+        for c in range(len(classes)):
+            yt = -np.ones(x.shape[0], np.float32)
+            yt[members[c]] = 1.0
+            tasks.append(BinaryTask(x=x, y=yt, pos=c, neg=-1))
+        return TaskSet(tasks=tuple(tasks), classes=classes,
+                       strategy=self.name)
+
+    def decide(self, df, taskset, decision="vote"):
+        # OvR has one decision value per class (tasks are built in class
+        # order): argmax IS the decision (``decision`` mode is an OvO
+        # concept and is ignored here).
+        return jnp.argmax(jnp.asarray(df), axis=0)
+
+
+_STRATEGIES = {"ovo": OneVsOneStrategy, "ovr": OneVsRestStrategy}
+
+
+def get_strategy(name: str | MulticlassStrategy) -> MulticlassStrategy:
+    if isinstance(name, MulticlassStrategy):
+        return name
+    try:
+        return _STRATEGIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown multiclass strategy {name!r}; "
+                         f"expected one of {sorted(_STRATEGIES)}") from None
+
+
+# ------------------------------------------------------------ vote decisions
+def vote_decision(df: jnp.ndarray, pairs: np.ndarray, m: int) -> jnp.ndarray:
+    """Vectorized majority vote: one pair of (t, C) @ (C, m) matmuls
+    instead of a Python loop of C scatter-adds.
+
+    df: (C, t) decision values; pairs: (C, 2) class indices.
+    A tiny tanh(margin) term breaks ties toward the larger margin
+    (LIBSVM-style stability); ``neg = -1`` rows (OvR) drop out of the
+    one-hot.
+    """
+    df = jnp.asarray(df, jnp.float32)
+    pos = (df > 0).astype(jnp.float32)            # (C, t)
+    one_pos = _one_hot(pairs[:, 0], m)            # (C, m)
+    one_neg = _one_hot(pairs[:, 1], m)
+    # small integer counts — exact in f32 (the old loop mixed the 1e-6
+    # tie term into the same accumulator, where it fell below f32 eps)
+    votes = pos.T @ one_pos + (1.0 - pos).T @ one_neg       # (t, m)
+    tie = jnp.tanh(df).T @ (one_pos - one_neg)              # (t, m)
+    # lexicographic argmax: most votes first, largest tie-break margin
+    # among the leaders second, lowest class index last (LIBSVM order)
+    lead = votes >= jnp.max(votes, axis=1, keepdims=True) - 0.5
+    return jnp.argmax(jnp.where(lead, tie, -jnp.inf), axis=1)
+
+
+def margin_decision(df: jnp.ndarray, pairs: np.ndarray,
+                    m: int) -> jnp.ndarray:
+    """Summed-margin decision: each task contributes tanh(df) to its
+    positive class and −tanh(df) to its negative class; argmax wins.
+    Softer than voting — informative on ambiguous regions where vote
+    counts tie."""
+    df = jnp.asarray(df, jnp.float32)
+    w = jnp.tanh(df)                              # (C, t)
+    score = w.T @ _one_hot(pairs[:, 0], m) - w.T @ _one_hot(pairs[:, 1], m)
+    return jnp.argmax(score, axis=1)
+
+
+def _one_hot(idx: np.ndarray, m: int) -> jnp.ndarray:
+    """(C,) class indices -> (C, m) one-hot; idx = -1 maps to all-zeros."""
+    idx = np.asarray(idx, np.int64)
+    out = np.zeros((len(idx), m), np.float32)
+    valid = idx >= 0
+    out[np.arange(len(idx))[valid], idx[valid]] = 1.0
+    return jnp.asarray(out)
+
+
+# ------------------------------------------------------------------ schedule
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Size-bucketing + worker-layout policy.
+
+    bucket_by: "pow2" rounds each task length up to the next power of
+               two (>= min_width) and groups equal widths — a handful of
+               compiled programs, bounded <2x sample padding per task.
+               "none" is the legacy layout: one bucket, every task
+               padded to the global max (or ``pad_width``).
+    min_width: floor on bucket widths, so tiny tasks share one program
+               instead of compiling log2(min) distinct shapes.
+    n_workers: mesh worker count the layout targets (1 = single device).
+    pad_width: bucket_by="none" only — force the single bucket's width
+               (the OvOTasks shims pass the pre-padded task width).
+    """
+
+    bucket_by: str = "pow2"
+    min_width: int = 32
+    n_workers: int = 1
+    pad_width: int | None = None
+
+
+class Bucket(NamedTuple):
+    """One shape bucket: every task in it runs at sample-width ``width``.
+
+    ``task_ids`` is the (n_workers, slots_per_worker) layout grid — row
+    p lists the TaskSet indices worker p executes for this bucket, −1
+    marking dummy slots (fully masked solves that only equalize the
+    SPMD slot count)."""
+
+    width: int
+    task_ids: np.ndarray
+
+    @property
+    def n_slots(self) -> int:
+        return self.task_ids.size
+
+
+class Schedule(NamedTuple):
+    buckets: tuple[Bucket, ...]
+    n_workers: int
+
+
+def bucket_width(size: int, cfg: ScheduleConfig) -> int:
+    if cfg.bucket_by == "none":
+        raise ValueError("bucket_by='none' has a single explicit width")
+    if cfg.bucket_by != "pow2":
+        raise ValueError(f"unknown bucket_by {cfg.bucket_by!r}; "
+                         "expected 'pow2' or 'none'")
+    return max(cfg.min_width, 1 << (max(size, 1) - 1).bit_length())
+
+
+def task_cost(width: int) -> float:
+    """Relative cost of one scheduled slot. SMO iteration count scales
+    ~linearly with task size and each iteration pays O(width) kernel-row
+    work, so width^2 is the standing estimate (exact constants don't
+    matter — LPT only needs relative order)."""
+    return float(width) ** 2
+
+
+def build_schedule(sizes: Sequence[int],
+                   cfg: ScheduleConfig = ScheduleConfig()) -> Schedule:
+    """Bucket tasks by padded width, then greedy-LPT the layout.
+
+    Buckets are processed largest-first; within the current bucket each
+    task goes to the least-loaded worker (load = summed slot cost), so
+    the heaviest work levels first and light buckets fill the cracks —
+    the classic LPT 4/3-approximation, vs. the old blind C/P striping
+    that could stack every wide pair on one worker.
+    """
+    sizes = np.asarray(sizes, np.int64)
+    if sizes.ndim != 1 or len(sizes) == 0:
+        raise ValueError("sizes must be a non-empty 1-D sequence")
+    p = max(1, cfg.n_workers)
+
+    if cfg.bucket_by == "none":
+        width = int(cfg.pad_width if cfg.pad_width is not None
+                    else sizes.max())
+        if width < sizes.max():
+            raise ValueError(f"pad_width {width} < max task size "
+                             f"{sizes.max()}")
+        by_width = {width: list(range(len(sizes)))}
+    else:
+        # cap at the global max task size: rounding the WIDEST task up to
+        # the next power of two (or up to min_width, when every task is
+        # tiny) would schedule more padding than the legacy pad-to-max
+        # layout this replaces
+        cap = int(sizes.max())
+        by_width: dict[int, list[int]] = {}
+        for t, s in enumerate(sizes):
+            w = min(bucket_width(int(s), cfg), cap)
+            by_width.setdefault(w, []).append(t)
+
+    loads = np.zeros(p, np.float64)
+    buckets = []
+    for width in sorted(by_width, reverse=True):
+        ids = sorted(by_width[width], key=lambda t: -sizes[t])
+        per_worker: list[list[int]] = [[] for _ in range(p)]
+        for t in ids:
+            w = int(np.argmin(loads))
+            per_worker[w].append(t)
+            loads[w] += task_cost(width)
+        slots = max(len(g) for g in per_worker)
+        grid = np.full((p, slots), -1, np.int64)
+        for w, g in enumerate(per_worker):
+            grid[w, :len(g)] = g
+            # dummy slots still execute a masked solve in SPMD lockstep
+            loads[w] += task_cost(width) * (slots - len(g))
+        buckets.append(Bucket(width=width, task_ids=grid))
+    return Schedule(buckets=tuple(buckets), n_workers=p)
+
+
+def schedule_stats(sizes: Sequence[int], schedule: Schedule) -> dict:
+    """Padding accounting for a schedule: how much of the scheduled cost
+    is real work vs. pad-to-width / dummy-slot waste."""
+    sizes = np.asarray(sizes, np.int64)
+    real = float(sum(task_cost(int(s)) for s in sizes))
+    scheduled = 0.0
+    for b in schedule.buckets:
+        scheduled += task_cost(b.width) * b.n_slots
+    return {
+        "n_tasks": int(len(sizes)),
+        "n_buckets": len(schedule.buckets),
+        "bucket_widths": [int(b.width) for b in schedule.buckets],
+        "scheduled_cost": scheduled,
+        "real_cost": real,
+        "padded_flop_fraction": 1.0 - real / scheduled if scheduled else 0.0,
+    }

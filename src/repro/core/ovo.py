@@ -1,5 +1,12 @@
 """One-vs-one multiclass decomposition (paper Sec. III, Fig. 4).
 
+NOTE: this is the LEGACY padded-stack task builder, retained because its
+fixed-shape ``OvOTasks`` layout is the input contract of the
+``vmapped_ovo_fit`` / ``distributed_ovo_fit`` shims. New code should go
+through the strategy layer — ``repro.core.multiclass.OneVsOneStrategy``
+builds variable-length tasks that the size-bucketed scheduler runs
+without pad-to-max waste (``repro.core.dist.fit_taskset``).
+
 For m classes the problem splits into C = m(m-1)/2 *independent* binary
 subproblems — the unit of distribution in the paper's MPI layer. Task
 construction happens on the host (numpy), producing fixed-shape padded
@@ -75,17 +82,19 @@ def vote(decisions: jax.Array, pairs: np.ndarray, classes: np.ndarray,
          n_real_tasks: int) -> jax.Array:
     """Majority vote.  decisions: (C_padded, n_test) binary decision values.
 
+    Vectorized: the old Python loop of C scatter-adds is now a
+    precomputed (C, 2) class-index array + one pair of (n_test, C) @
+    (C, m) matmuls in ``multiclass.vote_decision`` (with the same tiny
+    tanh-margin tiebreaker, LIBSVM-style stability).
+
     Returns (n_test,) predicted class indices into ``classes``.
     """
+    from repro.core import multiclass as MC  # local: avoid import cycle
+
     m = len(classes)
     cls_index = {c: i for i, c in enumerate(classes)}
-    votes = jnp.zeros((decisions.shape[1], m), jnp.float32)
-    for t in range(n_real_tasks):
-        a, b = pairs[t]
-        pos = (decisions[t] > 0)
-        votes = votes.at[:, cls_index[a]].add(pos.astype(jnp.float32))
-        votes = votes.at[:, cls_index[b]].add((~pos).astype(jnp.float32))
-        # tiny margin-magnitude tiebreaker, LIBSVM-style stability
-        votes = votes.at[:, cls_index[a]].add(1e-6 * jnp.tanh(decisions[t]))
-        votes = votes.at[:, cls_index[b]].add(-1e-6 * jnp.tanh(decisions[t]))
-    return jnp.argmax(votes, axis=1)
+    pair_idx = np.array(
+        [[cls_index[a], cls_index[b]] for a, b in np.asarray(pairs)[:n_real_tasks]],
+        np.int64)
+    return MC.vote_decision(jnp.asarray(decisions)[:n_real_tasks],
+                            pair_idx, m)

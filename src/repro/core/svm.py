@@ -3,33 +3,54 @@
     clf = SVC(kernel="rbf", C=1.0, solver="smo")      # paper's CUDA path
     clf = SVC(kernel="rbf", C=1.0, solver="gd")       # paper's TF baseline
     clf = SVC(engine="chunked", shrink_every=4)       # n >> 8k training
+    clf = SVC(strategy="ovr")                         # one-vs-rest
+    clf = SVC(decision="margin")                      # OvO summed margins
     clf.fit(X, y)                                     # binary OR multiclass
     clf.predict(Xt); clf.score(Xt, yt)
 
-Multiclass fits use one-vs-one. ``mesh``/``worker_axes`` route the task
-axis through the distributed (shard_map) "MPI" layer; without a mesh the
-tasks are vmapped on the local device (single-GPU configuration of the
-paper).
+Multiclass fits go through the strategy layer (``repro.core.multiclass``):
+``strategy`` picks the decomposition ("ovo" pairwise, "ovr" one-vs-rest),
+``decision`` the OvO aggregation ("vote" majority, "margin" summed
+tanh-margins; OvR always argmaxes). The size-bucketed scheduler solves
+each shape bucket at its own width (``schedule="bucketed"``) instead of
+padding every task to the widest class pair (``schedule="padded"``, the
+legacy layout). ``mesh``/``worker_axes`` shard each bucket's task axis
+over the distributed (shard_map) "MPI" layer with a greedy LPT worker
+layout; without a mesh the buckets are vmapped on the local device
+(single-GPU configuration of the paper).
 
-All Gram computation flows through ``repro.core.kernel_engine`` —
-``engine`` picks the backend ("auto" | "dense" | "chunked" | "pallas" or
-a full ``EngineConfig``). After ``fit`` the model keeps only the support
-vectors (alpha > 0) for serving: ``decision_function`` cost scales with
-#SV, not with the training-set size.
+All Gram computation — training AND serving — flows through
+``repro.core.kernel_engine``; ``engine`` picks the backend ("auto" |
+"dense" | "chunked" | "pallas" or a full ``EngineConfig``). After ``fit``
+the model keeps only the support vectors (alpha > 0): per serving bucket
+for multiclass, so ``decision_function`` cost scales with #SV, not with
+the training-set size.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import dist, gd, kernel_engine as KE, kernels as K, ovo, smo
+from repro.core import dist, gd, kernel_engine as KE, kernels as K
+from repro.core import multiclass as MC
+from repro.core import smo
 
 _SV_EPS = 1e-8
+
+
+class _ServingBucket(NamedTuple):
+    """One compacted serving group: tasks whose SV counts round to the
+    same pow2 width, stacked for a single vmapped engine.decide."""
+
+    task_ids: np.ndarray  # (Cb,) TaskSet indices
+    sv_x: np.ndarray      # (Cb, w, d) support vectors, zero-padded
+    sv_coef: np.ndarray   # (Cb, w) alpha_i * y_i, 0 on padding
+    b: np.ndarray         # (Cb,)
 
 
 class SVC:
@@ -40,6 +61,9 @@ class SVC:
                  gd_steps: int = 300,
                  engine: str | KE.EngineConfig = "auto",
                  shrink_every: int = 0,
+                 strategy: str | MC.MulticlassStrategy = "ovo",
+                 decision: str = "vote",
+                 schedule: str = "bucketed",
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",)):
         self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
@@ -50,18 +74,26 @@ class SVC:
         self.solver = solver
         self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
                            else KE.EngineConfig(backend=engine))
+        self.strategy = MC.get_strategy(strategy)
+        self.decision = decision
+        if schedule not in ("bucketed", "padded"):
+            raise ValueError(f"unknown schedule {schedule!r}; "
+                             "expected 'bucketed' or 'padded'")
+        self.schedule = schedule
         self.mesh = mesh
         self.worker_axes = worker_axes
         self._fitted = False
 
-    def _serving_engine(self, sv: jax.Array) -> KE.KernelEngine:
-        """Engine bound to the compacted SV set; serving never needs the
-        (sv, sv) training Gram, so dense/auto degrade to chunked."""
+    def _serving_cfg(self) -> KE.EngineConfig:
+        """Serving never needs the (sv, sv) training Gram, so dense/auto
+        degrade to chunked; an explicit pallas choice is honored."""
         backend = ("pallas" if self.engine_cfg.backend == "pallas"
                    else "chunked")
-        return KE.make_engine(
-            sv, self.kernel_params,
-            dataclasses.replace(self.engine_cfg, backend=backend))
+        return dataclasses.replace(self.engine_cfg, backend=backend,
+                                   cache_slots=0)
+
+    def _serving_engine(self, sv: jax.Array) -> KE.KernelEngine:
+        return KE.make_engine(sv, self.kernel_params, self._serving_cfg())
 
     # ------------------------------------------------------------------ fit
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVC":
@@ -72,75 +104,98 @@ class SVC:
         classes = np.unique(y)
         self.classes_ = classes
         if len(classes) == 2:
-            yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
-            ecfg = self.engine_cfg
-            if self.solver == "smo":
-                r = jax.jit(
-                    lambda xx, yv: smo.binary_smo(
-                        xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params,
-                        engine=ecfg)
-                )(jnp.asarray(x), jnp.asarray(yy))
-                self.n_iter_ = int(r.n_iter)
-                self.converged_ = bool(r.converged)
-            else:
-                r = jax.jit(
-                    lambda xx, yv: gd.binary_gd(
-                        xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params,
-                        engine=ecfg)
-                )(jnp.asarray(x), jnp.asarray(yy))
-                self.n_iter_ = int(r.n_iter)
-                self.converged_ = True
-            self._binary = True
-            self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
-            # serving state: compacted support-vector set only
-            sv = self.alpha_ > _SV_EPS
-            self.support_ = np.where(sv)[0]
-            self.n_support_ = int(sv.sum())
-            self.support_vectors_ = x[sv]
-            self.dual_coef_ = (self.alpha_ * yy)[sv].astype(np.float32)
+            self._fit_binary(x, y, classes)
         else:
-            n_workers = 1
-            if self.mesh is not None:
-                n_workers = int(np.prod([self.mesh.shape[a]
-                                         for a in self.worker_axes]))
-            tasks = ovo.build_tasks(x, y, pad_tasks_to=n_workers)
-            if self.mesh is not None:
-                fit = dist.distributed_ovo_fit(
-                    tasks, self.mesh, self.worker_axes, solver=self.solver,
-                    smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
-                    kernel=self.kernel_params, engine=self.engine_cfg)
-            else:
-                fit = dist.vmapped_ovo_fit(
-                    tasks, solver=self.solver, smo_cfg=self.smo_cfg,
-                    gd_cfg=self.gd_cfg, kernel=self.kernel_params,
-                    engine=self.engine_cfg)
-            self._binary = False
-            self._tasks = tasks
-            self._fit = jax.tree.map(np.asarray, fit)
-            self.n_iter_ = int(np.max(self._fit.n_iter))
-            self.converged_ = bool(np.all(
-                self._fit.converged[:ovo.n_binary_tasks(len(classes))]))
-            self._compact_tasks()
+            self._fit_multiclass(x, y)
         self._fitted = True
         return self
 
+    def _fit_binary(self, x, y, classes) -> None:
+        yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
+        ecfg = self.engine_cfg
+        if self.solver == "smo":
+            r = jax.jit(
+                lambda xx, yv: smo.binary_smo(
+                    xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params,
+                    engine=ecfg)
+            )(jnp.asarray(x), jnp.asarray(yy))
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)
+        else:
+            r = jax.jit(
+                lambda xx, yv: gd.binary_gd(
+                    xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params,
+                    engine=ecfg)
+            )(jnp.asarray(x), jnp.asarray(yy))
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = True
+        self._binary = True
+        self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
+        # serving state: compacted support-vector set only
+        sv = self.alpha_ > _SV_EPS
+        self.support_ = np.where(sv)[0]
+        self.n_support_ = int(sv.sum())
+        self.support_vectors_ = x[sv]
+        self.dual_coef_ = (self.alpha_ * yy)[sv].astype(np.float32)
+
+    def _fit_multiclass(self, x, y) -> None:
+        taskset = self.strategy.build_taskset(x, y)
+        n_workers = 1
+        if self.mesh is not None:
+            n_workers = int(np.prod([self.mesh.shape[a]
+                                     for a in self.worker_axes]))
+        bucket_by = "pow2" if self.schedule == "bucketed" else "none"
+        sched = MC.build_schedule(
+            taskset.sizes,
+            MC.ScheduleConfig(bucket_by=bucket_by, n_workers=n_workers))
+        fit = dist.fit_taskset(
+            taskset, sched, mesh=self.mesh, worker_axes=self.worker_axes,
+            solver=self.solver, smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
+            kernel=self.kernel_params, engine=self.engine_cfg)
+        self._binary = False
+        self._taskset = taskset
+        self._schedule = sched
+        self._fit = fit
+        self.n_iter_ = int(np.max(fit.n_iter))
+        self.converged_ = bool(np.all(fit.converged))
+        self._compact_tasks()
+
     def _compact_tasks(self) -> None:
-        """Per-task SV compaction: keep only alpha > 0 rows (padded with
-        coef = 0 rows up to the widest task, so one vmapped program serves
-        every task at #SV cost instead of n_task cost)."""
-        alpha = self._fit.alpha                       # (C, n_task)
-        coef = (alpha * self._tasks.y * self._tasks.mask).astype(np.float32)
-        sv_mask = (alpha > _SV_EPS) & self._tasks.mask
-        width = max(1, int(sv_mask.sum(axis=1).max()))
-        c_total, _, d = self._tasks.x.shape
-        sv_x = np.zeros((c_total, width, d), np.float32)
-        sv_coef = np.zeros((c_total, width), np.float32)
-        for t in range(c_total):
-            idx = np.flatnonzero(sv_mask[t])
-            sv_x[t, :len(idx)] = self._tasks.x[t, idx]
-            sv_coef[t, :len(idx)] = coef[t, idx]
-        self.n_support_ = sv_mask.sum(axis=1).astype(np.int64)
-        self._sv_x, self._sv_coef = sv_x, sv_coef
+        """Per-bucket SV compaction: keep only alpha > 0 rows of each
+        task, grouped into pow2 SV-width serving buckets — one vmapped
+        ``engine.decide`` program per bucket at #SV cost, instead of one
+        program padded to the widest task."""
+        taskset, fit = self._taskset, self._fit
+        sv_counts = np.zeros(taskset.n_tasks, np.int64)
+        sv_idx = []
+        for t, task in enumerate(taskset.tasks):
+            idx = np.flatnonzero(fit.alpha[t, :task.size] > _SV_EPS)
+            sv_idx.append(idx)
+            sv_counts[t] = len(idx)
+        self.n_support_ = sv_counts
+
+        sched = MC.build_schedule(
+            np.maximum(sv_counts, 1),
+            MC.ScheduleConfig(bucket_by="pow2", min_width=8, n_workers=1))
+        d = taskset.tasks[0].x.shape[1]
+        groups = []
+        for bucket in sched.buckets:
+            ids = bucket.task_ids.reshape(-1)
+            ids = ids[ids >= 0]
+            # pow2 groups the tasks; the stack width is the exact max SV
+            # count inside the group (never wider than any member task)
+            width = max(1, int(sv_counts[ids].max()))
+            sv_x = np.zeros((len(ids), width, d), np.float32)
+            sv_coef = np.zeros((len(ids), width), np.float32)
+            for s, t in enumerate(ids):
+                idx = sv_idx[t]
+                task = taskset.tasks[t]
+                sv_x[s, :len(idx)] = task.x[idx]
+                sv_coef[s, :len(idx)] = (fit.alpha[t, idx]
+                                         * task.y[idx]).astype(np.float32)
+            groups.append(_ServingBucket(task_ids=ids, sv_x=sv_x,
+                                         sv_coef=sv_coef, b=fit.b[ids]))
+        self._serving_buckets = groups
 
     # ------------------------------------------------------------- predict
     def decision_function(self, xt: np.ndarray) -> np.ndarray:
@@ -152,25 +207,27 @@ class SVC:
             eng = self._serving_engine(jnp.asarray(self.support_vectors_))
             df = eng.decide(xt, jnp.asarray(self.dual_coef_), self.b_)
             return np.asarray(df)
-        # (C, n_test) stacked binary decisions over compacted SV sets
-        gram_fn = K.make_gram_fn(self.kernel_params)
+        # (C, n_test) stacked binary decisions, one vmapped engine-backed
+        # program per serving bucket (respects engine="pallas"/"chunked")
+        scfg = self._serving_cfg()
+        kp = self.kernel_params
 
         def one(sv, coef, b):
-            kmat = gram_fn(xt, sv)
-            return kmat @ coef + b
+            return KE.make_engine(sv, kp, scfg).decide(xt, coef, b)
 
-        df = jax.vmap(one)(jnp.asarray(self._sv_x),
-                           jnp.asarray(self._sv_coef),
-                           jnp.asarray(self._fit.b))
-        return np.asarray(df)
+        df = np.zeros((self._taskset.n_tasks, xt.shape[0]), np.float32)
+        for g in self._serving_buckets:
+            out = jax.vmap(one)(jnp.asarray(g.sv_x), jnp.asarray(g.sv_coef),
+                                jnp.asarray(g.b))
+            df[g.task_ids] = np.asarray(out)
+        return df
 
     def predict(self, xt: np.ndarray) -> np.ndarray:
         df = self.decision_function(xt)
         if self._binary:
             return np.where(df > 0, self.classes_[0], self.classes_[1])
-        c_real = ovo.n_binary_tasks(len(self.classes_))
-        idx = ovo.vote(jnp.asarray(df), self._tasks.pairs,
-                       self._tasks.classes, c_real)
+        idx = self.strategy.decide(jnp.asarray(df), self._taskset,
+                                   self.decision)
         return self.classes_[np.asarray(idx)]
 
     def score(self, xt: np.ndarray, yt: np.ndarray) -> float:

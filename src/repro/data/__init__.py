@@ -1,7 +1,8 @@
 from repro.data.iris import load_iris
 from repro.data.synth import (load_breast_cancer_like, load_pavia_like,
-                              make_blobs)
+                              make_blobs, make_imbalanced_blobs)
 from repro.data.pipeline import normalize, train_test_split
 
 __all__ = ["load_iris", "load_breast_cancer_like", "load_pavia_like",
-           "make_blobs", "normalize", "train_test_split"]
+           "make_blobs", "make_imbalanced_blobs", "normalize",
+           "train_test_split"]

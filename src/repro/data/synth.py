@@ -36,6 +36,27 @@ def make_blobs(n_per_class: int, n_classes: int, n_features: int, *,
     return x[perm], y[perm]
 
 
+def make_imbalanced_blobs(class_sizes: "list[int] | tuple[int, ...]",
+                          n_features: int, *, sep: float = 3.0,
+                          seed: int = 0, cov_scale: float = 1.0
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Gaussian clusters with a DIFFERENT sample count per class — the
+    load-imbalance regime the size-bucketed multiclass scheduler targets
+    (one-vs-one task lengths then span sum-of-two-class sizes)."""
+    rng = np.random.default_rng(seed)
+    n_classes = len(class_sizes)
+    centers = rng.normal(scale=sep, size=(n_classes, n_features))
+    xs, ys = [], []
+    for c, n in enumerate(class_sizes):
+        xs.append(centers[c] +
+                  cov_scale * rng.normal(size=(n, n_features)))
+        ys.append(np.full(n, c, np.int64))
+    x = np.concatenate(xs, 0).astype(np.float32)
+    y = np.concatenate(ys, 0)
+    perm = rng.permutation(len(y))
+    return x[perm], y[perm]
+
+
 def load_pavia_like(n_per_class: int = 800, *, n_classes: int = 9,
                     n_bands: int = 102, seed: int = 7,
                     noise: float = 0.15) -> tuple[np.ndarray, np.ndarray]:

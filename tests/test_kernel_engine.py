@@ -273,9 +273,15 @@ class TestCompactedServing:
         x, y = load_iris()
         x = normalize(x)
         clf = SVC(solver="smo").fit(x, y)
-        n_task = clf._tasks.x.shape[1]
-        assert clf._sv_x.shape[1] < n_task  # strictly fewer rows served
-        assert clf._sv_x.shape[1] == int(np.max(clf.n_support_))
+        n_task = int(clf._taskset.sizes.max())
+        for g in clf._serving_buckets:
+            # strictly fewer rows served than trained, per bucket
+            assert g.sv_x.shape[1] < n_task
+            # bucket width covers its members' SV counts
+            assert g.sv_x.shape[1] >= clf.n_support_[g.task_ids].max()
+        served = np.concatenate([g.task_ids
+                                 for g in clf._serving_buckets])
+        assert sorted(served.tolist()) == list(range(clf._taskset.n_tasks))
         assert clf.score(x, y) >= 0.96
 
     def test_svc_chunked_engine_end_to_end(self):

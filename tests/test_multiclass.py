@@ -1,0 +1,298 @@
+"""The multiclass strategy layer: OvO/OvR task builders, the
+size-bucketed LPT scheduler, vectorized voting, and engine-backed
+multiclass serving."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dist, kernel_engine as KE, kernels as K
+from repro.core import multiclass as MC
+from repro.core import ovo
+from repro.core.svm import SVC
+from repro.data import (load_iris, make_blobs, make_imbalanced_blobs,
+                        normalize)
+
+IMBALANCED_SIZES = (64, 48, 24, 12, 7)  # 5-class fixture of the ISSUE
+
+
+def _imbalanced(seed=0):
+    x, y = make_imbalanced_blobs(IMBALANCED_SIZES, 10, sep=4.0, seed=seed)
+    return normalize(x), y
+
+
+# ------------------------------------------------------------- strategies
+class TestStrategies:
+    def test_ovo_taskset_shape(self):
+        x, y = _imbalanced()
+        ts = MC.get_strategy("ovo").build_taskset(x, y)
+        m = len(IMBALANCED_SIZES)
+        assert ts.n_tasks == m * (m - 1) // 2
+        # task sizes are sums of the two class sizes
+        sz = sorted(IMBALANCED_SIZES, reverse=True)
+        assert int(ts.sizes.max()) == sz[0] + sz[1]
+        assert int(ts.sizes.min()) == sz[-1] + sz[-2]
+        for t in ts.tasks:
+            assert set(np.unique(t.y)) == {-1.0, 1.0}
+
+    def test_ovr_taskset_shape(self):
+        x, y = _imbalanced()
+        ts = MC.get_strategy("ovr").build_taskset(x, y)
+        assert ts.n_tasks == len(IMBALANCED_SIZES)
+        for c, t in enumerate(ts.tasks):
+            assert t.size == len(y)                     # every sample
+            assert (t.y > 0).sum() == IMBALANCED_SIZES[c]
+            assert t.pos == c and t.neg == -1
+
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(ValueError, match="unknown multiclass"):
+            MC.get_strategy("ova")
+
+    def test_ovo_vs_ovr_agree_on_separable(self):
+        # well-separated blobs: both decompositions must predict the
+        # same classes (and get them right)
+        x, y = make_blobs(40, 4, 8, sep=6.0, seed=5)
+        x = normalize(x)
+        a = SVC(solver="smo", strategy="ovo").fit(x, y)
+        b = SVC(solver="smo", strategy="ovr").fit(x, y)
+        assert a.score(x, y) == 1.0
+        assert b.score(x, y) == 1.0
+        np.testing.assert_array_equal(a.predict(x), b.predict(x))
+
+    def test_margin_decision_matches_vote_when_unambiguous(self):
+        x, y = make_blobs(30, 3, 6, sep=6.0, seed=2)
+        x = normalize(x)
+        v = SVC(solver="smo", decision="vote").fit(x, y)
+        m = SVC(solver="smo", decision="margin").fit(x, y)
+        np.testing.assert_array_equal(v.predict(x), m.predict(x))
+
+    def test_bad_decision_mode_raises(self):
+        x, y = _imbalanced()
+        clf = SVC(solver="smo", decision="softmax").fit(x, y)
+        with pytest.raises(ValueError, match="unknown OvO decision"):
+            clf.predict(x[:4])
+
+
+# -------------------------------------------------------------- scheduler
+class TestScheduler:
+    def test_pow2_bucketing_and_lpt_cover_all_tasks(self):
+        sizes = [300, 40, 37, 150, 8, 8, 8]
+        sch = MC.build_schedule(sizes, MC.ScheduleConfig(n_workers=2))
+        seen = []
+        for b in sch.buckets:
+            assert b.task_ids.shape[0] == 2
+            for t in b.task_ids.reshape(-1):
+                if t >= 0:
+                    assert sizes[t] <= b.width  # width covers the task
+                    seen.append(int(t))
+        assert sorted(seen) == list(range(len(sizes)))
+
+    def test_tiny_tasks_capped_at_global_max(self):
+        # min_width must not push widths past the global max size: that
+        # would schedule MORE padding than the legacy pad-to-max layout
+        sch = MC.build_schedule([16, 16, 16], MC.ScheduleConfig())
+        assert [b.width for b in sch.buckets] == [16]
+        sb = MC.schedule_stats([16, 16, 16], sch)
+        assert sb["padded_flop_fraction"] == 0.0
+
+    def test_padded_schedule_is_single_bucket(self):
+        sch = MC.build_schedule([10, 20, 30],
+                                MC.ScheduleConfig(bucket_by="none"))
+        assert len(sch.buckets) == 1
+        assert sch.buckets[0].width == 30
+
+    def test_bucketed_schedules_less_cost_than_padded(self):
+        x, y = _imbalanced()
+        ts = MC.get_strategy("ovo").build_taskset(x, y)
+        bucketed = MC.build_schedule(ts.sizes, MC.ScheduleConfig())
+        padded = MC.build_schedule(ts.sizes,
+                                   MC.ScheduleConfig(bucket_by="none"))
+        sb = MC.schedule_stats(ts.sizes, bucketed)
+        sp = MC.schedule_stats(ts.sizes, padded)
+        assert sb["scheduled_cost"] < sp["scheduled_cost"]
+        assert sb["padded_flop_fraction"] < sp["padded_flop_fraction"]
+
+    def test_lpt_balances_workers(self):
+        # 4 heavy + 4 light tasks over 2 workers: LPT must not stack all
+        # heavy tasks on one worker (blind striping would)
+        sizes = [256, 256, 256, 256, 16, 16, 16, 16]
+        sch = MC.build_schedule(sizes, MC.ScheduleConfig(n_workers=2,
+                                                         min_width=16))
+        heavy = sch.buckets[0].task_ids
+        assert (heavy >= 0).sum(axis=1).tolist() == [2, 2]
+
+
+def test_schedule_property_hypothesis():
+    hyp = pytest.importorskip(
+        "hypothesis",
+        reason="optional dev dependency (see requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.lists(st.integers(1, 500), min_size=1, max_size=40),
+           st.integers(1, 4), st.sampled_from([8, 32, 64]))
+    @settings(max_examples=50, deadline=None)
+    def check(sizes, workers, min_width):
+        sch = MC.build_schedule(
+            sizes, MC.ScheduleConfig(n_workers=workers,
+                                     min_width=min_width))
+        seen = []
+        widths = set()
+        for b in sch.buckets:
+            assert b.width not in widths  # one bucket per shape
+            widths.add(b.width)
+            assert b.task_ids.shape[0] == workers
+            for t in b.task_ids.reshape(-1):
+                if t >= 0:
+                    assert sizes[t] <= b.width
+                    seen.append(int(t))
+        # every task scheduled exactly once
+        assert sorted(seen) == list(range(len(sizes)))
+
+    check()
+
+
+# ------------------------------------------------- bucketed == padded fit
+class TestBucketedEquivalence:
+    def test_fit_taskset_bucketed_matches_padded(self):
+        x, y = _imbalanced()
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        ts = MC.get_strategy("ovo").build_taskset(x, y)
+        fb = dist.fit_taskset(ts, kernel=kp,
+                              schedule_cfg=MC.ScheduleConfig())
+        fp = dist.fit_taskset(
+            ts, kernel=kp,
+            schedule_cfg=MC.ScheduleConfig(bucket_by="none"))
+        # masked solves are width-invariant: identical alphas and biases
+        np.testing.assert_allclose(fb.alpha, fp.alpha, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(fb.b, fp.b, rtol=1e-5, atol=1e-6)
+
+    def test_svc_bucketed_matches_padded_predictions(self):
+        x, y = _imbalanced()
+        b = SVC(solver="smo", schedule="bucketed").fit(x, y)
+        p = SVC(solver="smo", schedule="padded").fit(x, y)
+        # same support sets ...
+        np.testing.assert_array_equal(b.n_support_, p.n_support_)
+        np.testing.assert_allclose(b._fit.alpha, p._fit.alpha,
+                                   rtol=1e-5, atol=1e-6)
+        # ... and exactly the same predictions
+        xq = np.asarray(
+            make_imbalanced_blobs(IMBALANCED_SIZES, 10, sep=4.0,
+                                  seed=9)[0], np.float32)
+        np.testing.assert_array_equal(b.predict(xq), p.predict(xq))
+
+    def test_ovo_shim_matches_fit_taskset(self):
+        x, y = load_iris()
+        x = normalize(x)
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        tasks = ovo.build_tasks(x, y)
+        shim = dist.vmapped_ovo_fit(tasks, solver="smo", kernel=kp)
+        ts = dist.taskset_from_ovo(tasks)
+        fit = dist.fit_taskset(
+            ts, kernel=kp,
+            schedule_cfg=MC.ScheduleConfig(bucket_by="none",
+                                           pad_width=tasks.y.shape[1]))
+        np.testing.assert_allclose(np.asarray(shim.alpha)[:, :fit.alpha.shape[1]],
+                                   fit.alpha, rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------- vectorized vote
+class TestVote:
+    def _reference_votes(self, decisions, pairs, classes, n_real):
+        """The pre-vectorization loop-of-scatter-adds implementation
+        (returns the full vote matrix)."""
+        m = len(classes)
+        cls_index = {c: i for i, c in enumerate(classes)}
+        votes = np.zeros((decisions.shape[1], m), np.float64)
+        for t in range(n_real):
+            a, b = pairs[t]
+            pos = decisions[t] > 0
+            votes[:, cls_index[a]] += pos.astype(np.float64)
+            votes[:, cls_index[b]] += (~pos).astype(np.float64)
+            votes[:, cls_index[a]] += 1e-6 * np.tanh(decisions[t])
+            votes[:, cls_index[b]] -= 1e-6 * np.tanh(decisions[t])
+        return votes
+
+    def test_vectorized_vote_matches_loop_reference(self):
+        rng = np.random.default_rng(0)
+        classes = np.array([3, 7, 11, 20])
+        pairs = np.array([(a, b) for i, a in enumerate(classes)
+                          for b in classes[i + 1:]])
+        dec = rng.normal(size=(len(pairs) + 2, 64)).astype(np.float32)
+        got = np.asarray(ovo.vote(jnp.asarray(dec), pairs, classes,
+                                  len(pairs)))
+        votes = self._reference_votes(dec, pairs, classes, len(pairs))
+        want = np.argmax(votes, axis=1)
+        # summation ORDER differs (loop of scatter-adds vs one matmul),
+        # so argmax may legitimately flip where the 1e-6 tie-break sums
+        # agree to float noise; require equality on all decided samples
+        top2 = np.sort(votes, axis=1)[:, -2:]
+        decided = (top2[:, 1] - top2[:, 0]) > 1e-9
+        assert decided.sum() >= int(0.9 * len(decided))
+        np.testing.assert_array_equal(got[decided], want[decided])
+
+    def test_vectorized_vote_exact_on_unambiguous(self):
+        classes = np.array([0, 1, 2])
+        pairs = np.array([[0, 1], [0, 2], [1, 2]])
+        dec = jnp.asarray(np.array([[+1.0, -1.0], [+1.0, -5.0],
+                                    [+1.0, -1.0]]))
+        idx = np.asarray(ovo.vote(dec, pairs, classes, 3))
+        assert idx.tolist() == [0, 2]
+
+    def test_margin_decision_prefers_larger_margin(self):
+        # class 0 wins 0v1 weakly, loses 0v2; class 2 wins both its tasks
+        pairs = np.array([[0, 1], [0, 2], [1, 2]])
+        df = jnp.asarray(np.array([[0.1], [-2.0], [-2.0]]))
+        idx = MC.margin_decision(df, pairs, 3)
+        assert int(idx[0]) == 2
+
+
+# ---------------------------------------------------- engine-backed serving
+class TestServingEngine:
+    def test_multiclass_decision_function_respects_engine(self, monkeypatch):
+        """The multiclass serving path must go through KernelEngine (not
+        K.make_gram_fn directly), so engine='pallas'/'chunked' is honored
+        at predict time."""
+        x, y = _imbalanced()
+        clf = SVC(solver="smo", engine="chunked").fit(x, y)
+        seen = []
+        orig = KE.make_engine
+
+        def spy(xs, kernel, cfg=KE.EngineConfig(), **kw):
+            eng = orig(xs, kernel, cfg, **kw)
+            seen.append(eng.backend)
+            return eng
+
+        monkeypatch.setattr(KE, "make_engine", spy)
+        clf.decision_function(x[:8])
+        assert seen and all(b == "chunked" for b in seen)
+
+    def test_multiclass_pallas_serving_matches_chunked(self):
+        import dataclasses
+
+        x, y = _imbalanced()
+        clf = SVC(solver="smo", engine="chunked").fit(x, y)
+        df_chunked = clf.decision_function(x[:16])
+        # same fitted model, serving Gram re-routed to the pallas engine
+        clf.engine_cfg = dataclasses.replace(clf.engine_cfg,
+                                             backend="pallas")
+        df_pallas = clf.decision_function(x[:16])
+        np.testing.assert_allclose(df_chunked, df_pallas,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_ovr_svc_on_iris(self):
+        x, y = load_iris()
+        x = normalize(x)
+        clf = SVC(solver="smo", strategy="ovr").fit(x, y)
+        assert clf.score(x, y) >= 0.93
+        df = clf.decision_function(x[:5])
+        assert df.shape == (3, 5)  # one task per class
+
+
+# ----------------------------------------------------------- distributed
+def test_fit_taskset_rejects_mismatched_schedule():
+    x, y = _imbalanced()
+    ts = MC.get_strategy("ovo").build_taskset(x, y)
+    sch = MC.build_schedule(ts.sizes, MC.ScheduleConfig(n_workers=2))
+    with pytest.raises(ValueError, match="workers"):
+        dist.fit_taskset(ts, sch)  # no mesh -> 1 worker

@@ -1,0 +1,111 @@
+"""Single-problem strong scaling: sharded binary SMO vs shard count.
+
+One fixed n (default 8192) RBF problem, solved by ``sharded_binary_smo``
+at shard counts {1, 2, 4, 8} (clamped to the visible device count), one
+JSON line per point via ``benchmarks.common.emit_json``:
+
+    {"bench": "sharded", "n": 8192, "shards": 4, "wall_s": ...,
+     "n_iter": ..., "converged": ..., "n_sv": ...,
+     "peak_state_bytes_per_shard": ..., "xfull_bytes_per_shard": ...,
+     "gram_bytes_dense": ...}
+
+``peak_state_bytes_per_shard`` is the per-device resident kernel state
+(two working rows + the LRU cache + the f/alpha/mask shards, all
+O(n/shards)) — the strong-scaling memory axis; ``xfull_bytes_per_shard``
+is the replicated all-gathered sample matrix (O(n d), paid once per
+device, the price of collective-free kernel rows). ``gram_bytes_dense``
+(n^2 * 4) is what the paper's dense single-device layout would need.
+
+Run standalone (forces a multi-device host CPU BEFORE jax initializes):
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--quick]
+
+or via the runner on an already-multi-device process (CI sets XLA_FLAGS):
+
+    PYTHONPATH=src python -m benchmarks.run --only sharded [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+N = 8192
+N_QUICK = 2048
+SHARDS = (1, 2, 4, 8)
+CACHE_SLOTS = 16
+CHUNK = 1024
+D = 8
+
+
+def bench_one(n: int, n_shards: int) -> dict:
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kernel_engine as KE
+    from repro.core import kernels as K, smo
+    from repro.data import make_blobs, normalize
+    from repro.launch.mesh import make_shard_mesh
+
+    x, y = make_blobs(n // 2, 2, D, sep=4.0, seed=7)
+    yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+    x = normalize(x)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    cfg = smo.SMOConfig(max_iter=60_000)
+    ecfg = KE.EngineConfig(cache_slots=CACHE_SLOTS, chunk=CHUNK)
+    mesh = make_shard_mesh(n_shards)
+
+    def fit():
+        return smo.sharded_binary_smo(x, yy, mesh=mesh, cfg=cfg,
+                                      kernel=kp, engine=ecfg)
+
+    r = fit()                      # warmup includes compile
+    jax.block_until_ready(r.alpha)
+    t0 = time.perf_counter()
+    r = fit()
+    jax.block_until_ready(r.alpha)
+    wall = time.perf_counter() - t0
+    n_local = -(-n // n_shards)
+    return {
+        "bench": "sharded",
+        "n": n,
+        "shards": n_shards,
+        "wall_s": round(wall, 3),
+        "n_iter": int(r.n_iter),
+        "converged": bool(r.converged),
+        "gap": float(r.gap),
+        "n_sv": int((np.asarray(r.alpha) > 1e-8).sum()),
+        # f/alpha/active shards + two working rows + LRU slots, per device
+        "peak_state_bytes_per_shard": 4 * n_local * (3 + 2 + CACHE_SLOTS),
+        "xfull_bytes_per_shard": 4 * n * D,
+        "gram_bytes_dense": 4 * n * n,
+    }
+
+
+def main(quick: bool = False) -> None:
+    import jax
+
+    from benchmarks.common import emit_json
+
+    n = N_QUICK if quick else N
+    n_dev = jax.device_count()
+    shards = [s for s in SHARDS if s <= n_dev]
+    if quick:
+        shards = shards[:3]
+    for s in shards:
+        emit_json(bench_one(n, s))
+
+
+if __name__ == "__main__":
+    # must land before the first jax import in THIS process
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={max(SHARDS)}"
+        ).strip()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller n, fewer shard counts")
+    args = ap.parse_args()
+    main(quick=args.quick)

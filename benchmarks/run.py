@@ -12,6 +12,11 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
                                       JSON lines; --only large_n)
   beyond-paper  -> --only scheduler  (bucketed-vs-padded multiclass
                                       scheduler JSON alone; CI smoke)
+  beyond-paper  -> bench_sharded     (single-problem strong scaling vs
+                                      shard count, JSON lines; --only
+                                      sharded — needs a multi-device
+                                      process, e.g. XLA_FLAGS=
+                                      --xla_force_host_platform_device_count=8)
 """
 from __future__ import annotations
 
@@ -25,7 +30,8 @@ def main(argv=None) -> None:
                     help="drop the largest sample sizes")
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
-                         "kernels; opt-in extras: large_n,scheduler")
+                         "kernels; opt-in extras: large_n,scheduler,"
+                         "sharded")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -54,6 +60,10 @@ def main(argv=None) -> None:
     if only is not None and "large_n" in only:
         # opt-in: minutes-long at full size (JSON lines, not CSV)
         bench_large_n.main(quick=args.quick)
+    if only is not None and "sharded" in only:
+        # opt-in: single-problem strong scaling over forced host devices
+        from benchmarks import bench_sharded
+        bench_sharded.main(quick=args.quick)
 
 
 if __name__ == "__main__":

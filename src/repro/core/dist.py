@@ -22,6 +22,14 @@ pad-everything-to-the-widest-pair layout whose FLOPs were mostly zeros.
 Worker placement inside each bucket follows the schedule's greedy LPT
 grid rather than blind ``C/P`` striping.
 
+``shard`` adds the second parallelism axis from the paper — data-parallel
+WITHIN one QP: ``shard="data"`` runs every task through
+``smo.sharded_binary_smo`` (samples sharded over the mesh, collective
+working-set selection), and ``shard="auto"`` picks per bucket — wide
+buckets with fewer tasks than workers go data-parallel, the rest stay
+task-parallel. The hybrid is what lets a 3-class problem with one huge
+pair use all 8 devices instead of 3.
+
 ``vmapped_ovo_fit`` / ``distributed_ovo_fit`` survive as shims over
 ``fit_taskset``: they convert the legacy padded ``OvOTasks`` stack into
 a TaskSet and run it under a single-bucket ``bucket_by="none"`` schedule
@@ -54,23 +62,13 @@ from repro.core import multiclass as MC
 from repro.core import smo as smo_mod
 from repro.core.ovo import OvOTasks
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map  # type: ignore
+# version-compat shard_map wrapper now lives next to the sharded engine
+_shard_map = KE.shard_map_compat
 
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """Version-compat shard_map: the replication-check kwarg was renamed
-    (``check_rep`` on jax 0.4/0.5, ``check_vma`` on jax >= 0.6); calling
-    with the wrong one is a TypeError, which on the old kwarg silently
-    broke the whole distributed path."""
-    try:
-        return shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
-    except TypeError:
-        return shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)
+# fit_taskset(shard="auto") sends a bucket data-parallel only when its
+# tasks are wide enough to amortize the per-iteration collectives AND too
+# few to keep every worker busy under task parallelism
+DATA_PARALLEL_MIN_WIDTH = 2048
 
 
 def _batched_engine(engine):
@@ -183,6 +181,71 @@ def _bucket_arrays(taskset: MC.TaskSet, bucket: MC.Bucket):
     return xt, yt, mk
 
 
+def _data_parallel_bucket(taskset: MC.TaskSet, bucket: MC.Bucket, *,
+                          mesh: Mesh, axis: str,
+                          smo_cfg: smo_mod.SMOConfig,
+                          kernel: K.KernelParams, engine):
+    """Solve one bucket's tasks SEQUENTIALLY, each task sample-sharded
+    over the whole mesh axis (``smo.sharded_binary_smo``). Every task is
+    padded to the bucket width, so the bucket shares one compiled
+    program. Returns results in ``_bucket_arrays`` slot order (dummy
+    slots collapse: the grid is flattened to real task ids only)."""
+    ids = [int(t) for t in bucket.task_ids.reshape(-1) if t >= 0]
+    outs = {}
+    for t in ids:
+        task = taskset.tasks[t]
+        k = task.size
+        xt = np.zeros((bucket.width, task.x.shape[1]), np.float32)
+        yt = np.zeros((bucket.width,), np.float32)
+        mk = np.zeros((bucket.width,), bool)
+        xt[:k], yt[:k], mk[:k] = task.x, task.y, True
+        r = smo_mod.sharded_binary_smo(
+            jnp.asarray(xt), jnp.asarray(yt), jnp.asarray(mk),
+            mesh=mesh, axis=axis, cfg=smo_cfg, kernel=kernel,
+            engine=engine)
+        outs[t] = r
+    return outs
+
+
+def validate_data_shard(mesh, worker_axes, solver: str) -> None:
+    """Hard requirements of the sample-sharded (``shard="data"``) path —
+    shared by ``fit_taskset`` and ``SVC`` so the two entry points cannot
+    drift. An explicit data request that can't be honored must raise,
+    never silently degrade to a single-device task-parallel fit."""
+    if mesh is None:
+        raise ValueError("shard='data' needs a mesh to shard the sample "
+                         "axis over (e.g. launch.mesh.make_shard_mesh)")
+    if solver != "smo":
+        raise ValueError("shard='data' requires solver='smo' (the GD "
+                         "baseline has no sharded path)")
+    if len(worker_axes) != 1:
+        raise ValueError("shard='data' shards the sample axis over "
+                         "exactly one mesh axis; got "
+                         f"worker_axes={worker_axes}")
+    if worker_axes[0] not in mesh.shape:
+        raise ValueError(
+            f"worker axis {worker_axes[0]!r} is not an axis of the mesh "
+            f"(axes: {tuple(mesh.shape)}); pass worker_axes matching the "
+            f"mesh (make_shard_mesh's default axis is 'shards')")
+
+
+def _wants_data_parallel(shard: str, bucket: MC.Bucket, n_real: int,
+                         n_workers: int, solver: str, mesh,
+                         worker_axes, data_min_width: int) -> bool:
+    """Per-bucket parallelism mode. Explicit ``shard="data"`` validates
+    hard; ``"auto"`` goes data-parallel only where it wins — wide tasks
+    (collectives amortized over O(width) row work) that are too few to
+    fill the worker grid — and silently stays task-parallel elsewhere."""
+    if shard == "data":
+        validate_data_shard(mesh, worker_axes, solver)
+        return True
+    if shard == "task" or mesh is None or n_workers <= 1:
+        return False
+    # auto: hybrid per bucket
+    return (solver == "smo" and len(worker_axes) == 1
+            and bucket.width >= data_min_width and n_real < n_workers)
+
+
 def fit_taskset(taskset: MC.TaskSet,
                 schedule: Optional[MC.Schedule] = None,
                 *,
@@ -193,7 +256,9 @@ def fit_taskset(taskset: MC.TaskSet,
                 gd_cfg: gd_mod.GDConfig = gd_mod.GDConfig(),
                 kernel: K.KernelParams = K.KernelParams(),
                 engine: Optional[KE.EngineConfig | str] = None,
-                schedule_cfg: Optional[MC.ScheduleConfig] = None
+                schedule_cfg: Optional[MC.ScheduleConfig] = None,
+                shard: str = "task",
+                data_min_width: int = DATA_PARALLEL_MIN_WIDTH
                 ) -> TaskSetFit:
     """Fit every binary task of ``taskset``, one solver program per
     schedule bucket.
@@ -203,6 +268,19 @@ def fit_taskset(taskset: MC.TaskSet,
     shard_map (each worker receives the contiguous run of slots the LPT
     layout placed on it). ``schedule`` defaults to a fresh pow2-bucketed
     build; pass ``schedule_cfg`` to tune bucketing without prebuilding.
+
+    ``shard`` picks the parallelism AXIS per bucket:
+
+    * ``"task"`` (default) — independent tasks across workers, the
+      paper's MPI_multiSMO layout.
+    * ``"data"`` — every task solved one after another, its SAMPLE axis
+      sharded over the whole mesh (``smo.sharded_binary_smo``); for few
+      huge tasks that task parallelism can't balance (requires
+      ``solver="smo"`` and a single worker axis).
+    * ``"auto"`` — hybrid: a bucket goes data-parallel when its width is
+      >= ``data_min_width`` AND it has fewer real tasks than workers
+      (i.e. task parallelism would leave devices idle); small/plentiful
+      buckets stay vmapped task-parallel.
     """
     n_workers = 1
     if mesh is not None:
@@ -218,6 +296,9 @@ def fit_taskset(taskset: MC.TaskSet,
 
     if solver not in ("smo", "gd"):
         raise ValueError(f"unknown solver {solver!r}")
+    if shard not in ("task", "data", "auto"):
+        raise ValueError(f"unknown shard mode {shard!r}; expected "
+                         "'task', 'data' or 'auto'")
     if isinstance(engine, str):
         engine = KE.EngineConfig(backend=engine)
     cfgs = dict(solver=solver, smo_cfg=smo_cfg, gd_cfg=gd_cfg,
@@ -231,6 +312,20 @@ def fit_taskset(taskset: MC.TaskSet,
     converged = np.zeros(c, bool)
 
     for bucket in schedule.buckets:
+        real_ids = bucket.task_ids.reshape(-1)
+        real_ids = real_ids[real_ids >= 0]
+        if _wants_data_parallel(shard, bucket, len(real_ids), n_workers,
+                                solver, mesh, worker_axes, data_min_width):
+            outs = _data_parallel_bucket(
+                taskset, bucket, mesh=mesh, axis=worker_axes[0],
+                smo_cfg=smo_cfg, kernel=kernel, engine=engine)
+            for t, r in outs.items():
+                k = int(sizes[t])
+                alpha[t, :k] = np.asarray(r.alpha)[:k]
+                b[t] = float(r.b)
+                n_iter[t] = int(r.n_iter)
+                converged[t] = bool(r.converged)
+            continue
         xt, yt, mk = _bucket_arrays(taskset, bucket)
         if mesh is None:
             out = _fit_many(jnp.asarray(xt), jnp.asarray(yt),
@@ -262,11 +357,22 @@ def taskset_from_ovo(tasks: OvOTasks) -> MC.TaskSet:
     slots on its own."""
     cls_index = {c: i for i, c in enumerate(tasks.classes)}
     out = []
+    seen_empty = False
     for t in range(tasks.x.shape[0]):
         k = int(tasks.mask[t].sum())
         if k == 0:
+            seen_empty = True
             continue
-        assert tasks.mask[t, :k].all(), "OvOTasks mask must be a prefix"
+        if seen_empty:
+            # the shims re-expand results positionally (alpha[:c_real]),
+            # which is only correct when dropped dummies are TRAILING
+            raise ValueError(
+                f"fully-masked OvOTasks entry precedes real task {t}; "
+                f"padding tasks must be trailing (ovo.build_tasks "
+                f"pad_tasks_to appends them)")
+        if not tasks.mask[t, :k].all():
+            raise ValueError(f"OvOTasks mask for task {t} is not a "
+                             f"prefix; cannot convert to a TaskSet")
         a, b = tasks.pairs[t]
         out.append(MC.BinaryTask(
             x=np.asarray(tasks.x[t, :k], np.float32),

@@ -39,6 +39,18 @@ Backends
     The chunked layout with the Gram hot spots routed through the tiled
     Pallas TPU kernels in ``repro.kernels.ops`` (MXU-aligned VMEM blocks;
     RBF and linear). Non-Pallas kernels fall back to the jnp path.
+``sharded``
+    The data-parallel backend for SINGLE-problem solves, used INSIDE a
+    ``shard_map`` body whose sample axis is sharded over
+    ``EngineConfig.shard_axis``. ``x`` is the local (n_local, d) shard;
+    the full (n, d) sample matrix is all-gathered once (the data, never
+    the Gram), after which every Gram evaluation is local compute:
+    methods return the LOCAL SLICE of the global quantity. ``row(i)`` is
+    the owner-replicated global row restricted to local samples,
+    ``matvec(v_local)`` all-gathers ``v`` and returns the local row
+    block of ``K @ v``, ``decide`` psums per-shard partial decisions.
+    This is the engine behind ``core.smo.sharded_binary_smo`` — the JAX
+    analog of the paper's per-rank Gram row blocks + MPI_Allreduce.
 
 Adaptive shrinking (solver-side, engine-aware)
 ----------------------------------------------
@@ -96,6 +108,24 @@ import jax.numpy as jnp
 
 from repro.core import kernels as K
 
+try:  # jax >= 0.6 exposes shard_map at top level
+    _shard_map_fn = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map_fn
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: the replication-check kwarg was renamed
+    (``check_rep`` on jax 0.4/0.5, ``check_vma`` on jax >= 0.6); calling
+    with the wrong one is a TypeError. Shared by ``core.dist`` (task
+    sharding) and ``core.smo.sharded_binary_smo`` (sample sharding)."""
+    try:
+        return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map_fn(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
 
 class RowCache(NamedTuple):
     """Functional LRU row-cache state (threaded through solver loops)."""
@@ -112,18 +142,22 @@ class RowCache(NamedTuple):
 class EngineConfig:
     """Static engine selection/config — hashable, safe to close over jit.
 
-    backend:     auto | dense | chunked | pallas.
+    backend:     auto | dense | chunked | pallas | sharded.
     cache_slots: LRU row-cache capacity (chunked/pallas row mode).
     chunk:       row-block size for matvec()/decide() streaming.
     dense_limit: 'auto' picks dense up to this n, chunked above; also the
                  guard above which ChunkedKernelEngine.full() refuses to
                  materialize (n, n).
+    shard_axis:  mesh axis name the sample axis is sharded over —
+                 required by (and only meaningful for) the "sharded"
+                 backend, which must be built inside a shard_map body.
     """
 
     backend: str = "auto"
     cache_slots: int = 32
     chunk: int = 2048
     dense_limit: int = 8192
+    shard_axis: Optional[str] = None
 
 
 class KernelEngine:
@@ -335,10 +369,69 @@ class PallasKernelEngine(ChunkedKernelEngine):
         return self._pallas_gram(self.x, self.x)
 
 
+class ShardedKernelEngine(ChunkedKernelEngine):
+    """Sample-axis-sharded engine for use INSIDE a ``shard_map`` body.
+
+    ``x`` is the LOCAL (n_local, d) shard of the sample matrix;
+    construction all-gathers the full (n, d) matrix once (tiled — the
+    data is O(n d) and replicating it is what makes every subsequent
+    Gram evaluation collective-free; the (n, n) Gram itself is never
+    materialized anywhere). Methods return the LOCAL SLICE of the global
+    quantity, so the solver's per-sample state (f-cache, alpha, mask)
+    stays sharded:
+
+      row(i)     -> (n_local,)  K(x_i, x_local); i is a GLOBAL index,
+                    LRU-cached per shard under the global key
+      matvec(v)  -> (n_local,)  local row block of K @ v from the LOCAL
+                    shard of v (one all_gather of v per call)
+      diag()     -> (n_local,)  local self-kernel diagonal
+      cross(z)   -> (t, n_local) local column block of K(z, X)
+      decide(..) -> (t,)        exact global decision (psum of partials)
+
+    ``full()`` is refused: there is no global Gram in this layout.
+    """
+
+    backend = "sharded"
+
+    def __init__(self, x, kernel, cfg: EngineConfig = EngineConfig()):
+        if not cfg.shard_axis:
+            raise ValueError(
+                "ShardedKernelEngine needs EngineConfig.shard_axis (the "
+                "mesh axis the sample dimension is sharded over)")
+        super().__init__(x, kernel, cfg)
+        self.axis = cfg.shard_axis
+        self.x_full = jax.lax.all_gather(self.x, self.axis, tiled=True)
+        self.n_global = self.x_full.shape[0]
+
+    def _compute_row(self, i):
+        # x_i comes off the replicated x_full: no collective per row
+        if self._row_fn is not None:
+            return self._row_fn(self.x, self.x_full[i])
+        return self._gram_fn(self.x, self.x_full[i][None, :])[:, 0]
+
+    def matvec(self, v):
+        v_full = jax.lax.all_gather(v, self.axis, tiled=True)
+        blocks, _ = self._row_blocks()
+        out = jax.lax.map(
+            lambda xb: self._gram_fn(xb, self.x_full) @ v_full, blocks)
+        return out.reshape(-1)[:self.n]
+
+    def decide(self, z, coef, b=0.0):
+        # per-shard partial over local columns, then one psum
+        part = super().decide(z, coef, 0.0)
+        return jax.lax.psum(part, self.axis) + b
+
+    def full(self):
+        raise RuntimeError(
+            "ShardedKernelEngine has no global Gram; row()/matvec() "
+            "return local slices of the sharded sample axis")
+
+
 _BACKENDS = {
     "dense": DenseKernelEngine,
     "chunked": ChunkedKernelEngine,
     "pallas": PallasKernelEngine,
+    "sharded": ShardedKernelEngine,
 }
 
 

@@ -40,15 +40,22 @@ chunked ``engine.matvec``) gates the reported convergence.
 
 Everything is mask-aware so that one ``vmap``/``shard_map`` program can
 drive many padded one-vs-one tasks (the MPI layer in ``core.dist``).
+
+``sharded_binary_smo`` is the complementary axis of parallelism: ONE
+binary problem data-parallel across the mesh (samples sharded, selection
+made globally exact by ``combine_selection`` — the paper's per-rank
+block-reduce + MPI_Allreduce), for the single large QP that task
+parallelism cannot help with.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import kernel_engine as KE
 from repro.core import kernels as K
@@ -120,6 +127,34 @@ def _selection(f, alpha, y, mask, c):
     return f_up[i_up], i_up, f_low[i_low], i_low
 
 
+def _pair_update(a_i, a_j, y_i, y_j, f_i, f_j, k_ii, k_jj, k_ij, c):
+    """Scalar two-multiplier update for the working pair (i, j).
+
+    Unconstrained Newton step on a_j along the pair's violation
+    (f_i - f_j == b_low - b_up under first-order selection), clipped to
+    the box segment, with exact-bound snapping: f32 residues near 0/C
+    would otherwise keep dead multipliers inside I_up/I_low and stall
+    working-set selection. Shared verbatim by the single-device and
+    sharded iterations — this is what keeps their numerics identical.
+    """
+    eta = jnp.maximum(k_ii + k_jj - 2.0 * k_ij, 1e-12)
+    a_j_new = a_j + y_j * (f_i - f_j) / eta
+    same = y_i == y_j
+    lo = jnp.where(same, jnp.maximum(0.0, a_i + a_j - c),
+                   jnp.maximum(0.0, a_j - a_i))
+    hi = jnp.where(same, jnp.minimum(c, a_i + a_j),
+                   jnp.minimum(c, c + a_j - a_i))
+    a_j_new = jnp.clip(a_j_new, lo, hi)
+    a_i_new = a_i + y_i * y_j * (a_j - a_j_new)
+
+    snap = 1e-6 * c
+    a_j_new = jnp.where(a_j_new < snap, 0.0,
+                        jnp.where(a_j_new > c - snap, c, a_j_new))
+    a_i_new = jnp.where(a_i_new < snap, 0.0,
+                        jnp.where(a_i_new > c - snap, c, a_i_new))
+    return a_i_new, a_j_new
+
+
 def _shrink_active(f, alpha, y, mask, b_up, b_low, cfg: SMOConfig):
     """Samples that may still join a violating pair (LIBSVM-style).
 
@@ -183,27 +218,8 @@ def _smo_iteration(state: _State, *, y, mask, engine: KE.KernelEngine,
     row_i, cache = engine.row(i, cache)
     k_ii = row_i[i]
     k_ij = row_i[j]
-    # recompute the pair's violation for the update step size
-    b_low_pair = f[i]
-    b_up_pair = f[j]
-    eta = jnp.maximum(k_ii + k_jj - 2.0 * k_ij, 1e-12)
-
-    # unconstrained step on a_j, then clip to the box segment
-    # (pair's own violation: == b_low - b_up under first-order selection)
-    a_j_new = a_j + y_j * (b_low_pair - b_up_pair) / eta
-    same = y_i == y_j
-    lo = jnp.where(same, jnp.maximum(0.0, a_i + a_j - c), jnp.maximum(0.0, a_j - a_i))
-    hi = jnp.where(same, jnp.minimum(c, a_i + a_j), jnp.minimum(c, c + a_j - a_i))
-    a_j_new = jnp.clip(a_j_new, lo, hi)
-    a_i_new = a_i + y_i * y_j * (a_j - a_j_new)
-
-    # snap to exact bounds: f32 residues near 0/C would otherwise keep
-    # dead multipliers inside I_up/I_low and stall working-set selection
-    snap = 1e-6 * c
-    a_j_new = jnp.where(a_j_new < snap, 0.0,
-                        jnp.where(a_j_new > c - snap, c, a_j_new))
-    a_i_new = jnp.where(a_i_new < snap, 0.0,
-                        jnp.where(a_i_new > c - snap, c, a_i_new))
+    a_i_new, a_j_new = _pair_update(a_i, a_j, y_i, y_j, f[i], f[j],
+                                    k_ii, k_jj, k_ij, c)
 
     d_i = jnp.where(step_live, a_i_new - a_i, 0.0)
     d_j = jnp.where(step_live, a_j_new - a_j, 0.0)
@@ -342,6 +358,303 @@ def binary_smo(x: jax.Array,
     return SMOResult(alpha=state.alpha * mask, b=b, n_iter=state.n_iter,
                      converged=b_low <= b_up + 2.0 * cfg.tol,
                      gap=b_low - b_up, n_active=n_active)
+
+
+# --------------------------------------------------------------------------
+# Sharded single-problem SMO: data-parallel over the SAMPLE axis.
+#
+# The paper's MPI-CUDA solver is data-parallel WITHIN one QP: every rank
+# owns a row block of the Gram matrix, working-set selection is a per-rank
+# block-reduce followed by an MPI_Allreduce, and the f-cache update is
+# embarrassingly parallel over the rank's samples. The JAX analog below
+# shards x / y / alpha / f over a mesh axis via shard_map:
+#
+#   per-rank block-reduce   ->  masked min/argmin on the LOCAL shard
+#   MPI_Allreduce           ->  all_gather of P (value, global index)
+#                               pairs + an identical local reduction
+#                               (combine_selection) on every shard
+#   Gram row block          ->  ShardedKernelEngine.row — x is replicated
+#                               (all-gathered once), rows are local compute
+#   scalar pair state       ->  one psum of owner-masked picks per step
+#
+# The combine preserves FIRST-OCCURRENCE argmin/argmax semantics (shards
+# are contiguous sample blocks in axis order), so the selected violating
+# pair — and therefore the whole optimization trajectory — is bit-for-bit
+# the single-device one.
+# --------------------------------------------------------------------------
+def _combine_min(vals, idxs):
+    s = jnp.argmin(vals)
+    return vals[s], idxs[s]
+
+
+def _combine_max(vals, idxs):
+    s = jnp.argmax(vals)
+    return vals[s], idxs[s]
+
+
+def combine_selection(b_up_shards, i_up_shards, b_low_shards, i_low_shards):
+    """Cross-shard WSS reduction: per-shard extrema (+ GLOBAL argindices),
+    ordered by shard, -> global (b_up, i_up, b_low, i_low).
+
+    Bit-exact vs. the unsharded ``_selection``: ``argmin`` over per-shard
+    minima picks the FIRST shard attaining the global min, and the local
+    ``argmin`` inside that shard picked its first local attainer, so the
+    composed index is the first GLOBAL attainer — identical tie-breaking
+    to ``jnp.argmin`` over the concatenated array (and symmetrically for
+    the max side). This is the correctness-critical collective kernel;
+    it is tested in isolation in ``tests/test_sharded_smo.py``.
+    """
+    b_up, i_up = _combine_min(b_up_shards, i_up_shards)
+    b_low, i_low = _combine_max(b_low_shards, i_low_shards)
+    return b_up, i_up, b_low, i_low
+
+
+def _sharded_selection(f, alpha, y, mask, c, axis):
+    """Globally-exact working-set selection from (n_local,) shards.
+
+    One local ``_selection`` + two small all_gathers (P values, P global
+    indices per side) + the replicated ``combine_selection`` — the
+    MPI_Allreduce stage of the paper's Fig. 3, returning GLOBAL indices.
+    """
+    n_local = f.shape[0]
+    b_up_l, i_up_l, b_low_l, i_low_l = _selection(f, alpha, y, mask, c)
+    base = jax.lax.axis_index(axis) * n_local
+    vals = jax.lax.all_gather(jnp.stack([b_up_l, b_low_l]), axis)
+    idxs = jax.lax.all_gather(jnp.stack([base + i_up_l, base + i_low_l]),
+                              axis)
+    return combine_selection(vals[:, 0], idxs[:, 0], vals[:, 1], idxs[:, 1])
+
+
+def _owner_pick(vec, g, me):
+    """Owner-masked entry of a sharded vector at GLOBAL index g: the
+    owner shard contributes its value, everyone else 0 — summing the
+    picks across shards (one stacked psum) replicates the scalar."""
+    n_local = vec.shape[0]
+    return jnp.where((g // n_local) == me, vec[g % n_local], 0.0)
+
+
+def _sharded_smo_iteration(state: _State, *, y, mask,
+                           engine: KE.ShardedKernelEngine, cfg: SMOConfig,
+                           diag=None, shrink: bool = False):
+    """One pair update with all per-sample state sharded over engine.axis.
+
+    Mirrors ``_smo_iteration`` stage for stage; every divergence is a
+    collective: selection all-gathers per-shard extrema, the pair's
+    scalars (f, alpha, y, kernel entries at i and j) arrive via ONE
+    stacked psum of owner-masked picks, and the f-cache update applies
+    the shared ``_pair_update`` deltas to the local slice of the two
+    kernel rows.
+    """
+    axis = engine.axis
+    alpha, f = state.alpha, state.f
+    c = cfg.C
+    me = jax.lax.axis_index(axis)
+    n_local = y.shape[0]
+    sel_mask = (mask & state.active) if shrink else mask
+    b_up, i_up, b_low, i_low = _sharded_selection(f, alpha, y, sel_mask, c,
+                                                  axis)
+    step_live = b_low > b_up + 2.0 * cfg.tol
+
+    j = i_up  # global index
+    row_j, cache = engine.row(j, state.cache)
+    k_jj = jax.lax.psum(_owner_pick(row_j, j, me), axis)
+
+    if cfg.selection == "second":
+        # local gain block-reduce + the same first-occurrence combine
+        eps = 1e-6 * c
+        pos, neg = y > 0, y <= 0
+        low_mask = sel_mask & ((pos & (alpha > eps))
+                               | (neg & (alpha < c - eps)))
+        eta_all = jnp.maximum(diag + k_jj - 2.0 * row_j, 1e-12)
+        df = f - b_up
+        gain = jnp.where(low_mask & (df > 0.0), df * df / eta_all, -jnp.inf)
+        li = jnp.argmax(gain)
+        _, i = _combine_max(jax.lax.all_gather(gain[li], axis),
+                            jax.lax.all_gather(me * n_local + li, axis))
+    else:
+        i = i_low
+
+    row_i, cache = engine.row(i, cache)
+    # every scalar the update needs, in one collective
+    picks = jnp.stack([
+        _owner_pick(f, i, me), _owner_pick(f, j, me),
+        _owner_pick(alpha, i, me), _owner_pick(alpha, j, me),
+        _owner_pick(y, i, me), _owner_pick(y, j, me),
+        _owner_pick(row_i, i, me), _owner_pick(row_i, j, me),
+    ])
+    f_i, f_j, a_i, a_j, y_i, y_j, k_ii, k_ij = jax.lax.psum(picks, axis)
+    a_i_new, a_j_new = _pair_update(a_i, a_j, y_i, y_j, f_i, f_j,
+                                    k_ii, k_jj, k_ij, c)
+
+    d_i = jnp.where(step_live, a_i_new - a_i, 0.0)
+    d_j = jnp.where(step_live, a_j_new - a_j, 0.0)
+
+    alpha = alpha.at[i % n_local].add(
+        jnp.where((i // n_local) == me, d_i, 0.0))
+    alpha = alpha.at[j % n_local].add(
+        jnp.where((j // n_local) == me, d_j, 0.0))
+    # the "one thread per sample" stage, on this shard's samples only;
+    # float association matches _smo_iteration branch for branch
+    if shrink:
+        upd = d_i * y_i * row_i + d_j * y_j * row_j
+        f = jnp.where(state.active, f + upd, f)
+    else:
+        f = f + d_i * y_i * row_i + d_j * y_j * row_j
+
+    return state._replace(alpha=alpha,
+                          f=f,
+                          n_iter=state.n_iter + step_live.astype(jnp.int32),
+                          b_up=b_up,
+                          b_low=b_low,
+                          cache=cache)
+
+
+def _sharded_smo_solve(x, y, mask, *, cfg: SMOConfig,
+                       kernel: K.KernelParams, ecfg: KE.EngineConfig):
+    """shard_map body: ``binary_smo`` with (n_local,) shards of x/y/mask.
+
+    Scalars (b, n_iter, converged, gap, n_active) come out replicated;
+    alpha comes out sharded. Structured like ``binary_smo`` — same
+    while/fori convergence loop, same shrinking state machine — with the
+    sharded iteration/selection and a psum'd n_active.
+    """
+    axis = ecfg.shard_axis
+    y = y.astype(jnp.float32)
+    mask = mask & (jnp.abs(y) > 0.5)  # padded labels are 0
+
+    eng = KE.ShardedKernelEngine(x.astype(jnp.float32), kernel, ecfg)
+    shrink = cfg.shrink_every > 0
+    n_local = y.shape[0]
+
+    f0 = -y
+    state0 = _State(alpha=jnp.zeros((n_local,), jnp.float32), f=f0,
+                    n_iter=jnp.zeros((), jnp.int32),
+                    b_up=jnp.asarray(-1.0, jnp.float32),
+                    b_low=jnp.asarray(1.0, jnp.float32),
+                    active=mask,
+                    done=jnp.asarray(False),
+                    checks=jnp.zeros((), jnp.int32),
+                    cache=eng.init_cache())
+
+    diag = eng.diag() if cfg.selection == "second" else None
+    iteration = partial(_sharded_smo_iteration, y=y, mask=mask, engine=eng,
+                        cfg=cfg, diag=diag, shrink=shrink)
+
+    def cond(state: _State):
+        return (~state.done) & (state.n_iter < cfg.max_iter)
+
+    def body(state: _State):
+        state = jax.lax.fori_loop(0, cfg.check_every,
+                                  lambda _, s: iteration(s), state)
+        # b_up/b_low are replicated, so every shard takes the same branch
+        conv_active = state.b_low <= state.b_up + 2.0 * cfg.tol
+        if not shrink:
+            return state._replace(done=conv_active)
+        state = state._replace(checks=state.checks + 1)
+
+        def unshrink(s: _State):
+            f_full = eng.matvec(s.alpha * y) - y
+            b_up, _, b_low, _ = _sharded_selection(f_full, s.alpha, y,
+                                                   mask, cfg.C, axis)
+            return s._replace(f=f_full, active=mask,
+                              done=b_low <= b_up + 2.0 * cfg.tol,
+                              b_up=b_up, b_low=b_low)
+
+        def maybe_shrink(s: _State):
+            do = (s.checks % cfg.shrink_every) == 0
+            shrunk = _shrink_active(s.f, s.alpha, y, mask, s.b_up,
+                                    s.b_low, cfg) & s.active
+            return s._replace(active=jnp.where(do, shrunk, s.active))
+
+        return jax.lax.cond(conv_active, unshrink, maybe_shrink, state)
+
+    state = jax.lax.while_loop(cond, body, state0)
+    f_final = eng.matvec(state.alpha * y) - y if shrink else state.f
+    b_up, _, b_low, _ = _sharded_selection(f_final, state.alpha, y, mask,
+                                           cfg.C, axis)
+    b = -(b_up + b_low) / 2.0
+    n_active = jax.lax.psum(
+        jnp.sum((state.active & mask).astype(jnp.int32)), axis)
+    return SMOResult(alpha=state.alpha * mask, b=b, n_iter=state.n_iter,
+                     converged=b_low <= b_up + 2.0 * cfg.tol,
+                     gap=b_low - b_up, n_active=n_active)
+
+
+@lru_cache(maxsize=64)
+def _sharded_smo_program(mesh: Mesh, axis: str, cfg: SMOConfig,
+                         kernel: K.KernelParams, ecfg: KE.EngineConfig):
+    """Jitted shard_map program, cached per (mesh, configs): rebuilding
+    the wrapper per call would retrace on every solve (jit keys its cache
+    on the callable object)."""
+    body = partial(_sharded_smo_solve, cfg=cfg, kernel=kernel, ecfg=ecfg)
+    spec, rep = P(axis), P()
+    return jax.jit(KE.shard_map_compat(
+        body, mesh, (spec, spec, spec),
+        SMOResult(spec, rep, rep, rep, rep, rep)))
+
+
+def _resolve_sharded_cfg(engine, axis: str) -> KE.EngineConfig:
+    if engine is None:
+        return KE.EngineConfig(backend="sharded", shard_axis=axis)
+    if isinstance(engine, str):
+        engine = KE.EngineConfig(backend=engine)
+    if isinstance(engine, KE.EngineConfig):
+        # keep the tuning knobs (chunk, cache_slots, ...); the backend is
+        # necessarily "sharded" inside the shard_map body
+        return dataclasses.replace(engine, backend="sharded",
+                                   shard_axis=axis)
+    raise ValueError(
+        "sharded_binary_smo builds its engine inside the shard_map body; "
+        "pass an EngineConfig or backend name, not a bound engine "
+        f"({type(engine).__name__})")
+
+
+def sharded_binary_smo(x: jax.Array,
+                       y: jax.Array,
+                       mask: Optional[jax.Array] = None,
+                       *,
+                       mesh: Mesh,
+                       axis: str = "shards",
+                       cfg: SMOConfig = SMOConfig(),
+                       kernel: K.KernelParams = K.KernelParams(),
+                       engine: Optional[KE.EngineConfig | str] = None
+                       ) -> SMOResult:
+    """Solve ONE binary SVM dual with the sample axis sharded over
+    ``mesh.shape[axis]`` devices — the paper's data-parallel-within-one-QP
+    MPI-CUDA configuration, for problems a single device can't hold (or
+    can't hold fast enough).
+
+    x / y / mask / alpha / f are sharded as equal contiguous blocks
+    (n is zero-padded to a multiple of the shard count; padded rows are
+    masked out and their alphas are identically 0). Working-set selection
+    is globally exact: the cross-shard reduction (``combine_selection``)
+    is bit-identical to the unsharded argmin/argmax, so any divergence
+    from single-device ``binary_smo`` comes only from compiler-level
+    float contraction differences in the Gram rows (the SPMD partitioner
+    may fuse dots differently). In practice that means the SOLUTION
+    matches — same support set, |delta b| well under tol, identical
+    predictions (enforced by tests/test_sharded_smo.py) — while the
+    iteration-by-iteration trajectory can occasionally differ by a few
+    pair updates on its way to the same optimum.
+
+    Scalar-jit semantics apply per shard: adaptive shrinking
+    (``cfg.shrink_every``) and the LRU row cache both work here, unlike
+    the vmapped task-parallel path.
+
+    Returns a host-layout SMOResult with alpha trimmed back to (n,).
+    """
+    n = x.shape[0]
+    n_shards = int(mesh.shape[axis])
+    pad = (-n) % n_shards
+    x = jnp.pad(jnp.asarray(x, jnp.float32), ((0, pad), (0, 0)))
+    y = jnp.pad(jnp.asarray(y, jnp.float32), ((0, pad),))
+    m = (jnp.ones((n,), bool) if mask is None
+         else jnp.asarray(mask, bool))
+    m = jnp.pad(m, ((0, pad),))
+    ecfg = _resolve_sharded_cfg(engine, axis)
+    fit = _sharded_smo_program(mesh, axis, cfg, kernel, ecfg)
+    r = fit(x, y, m)
+    return r._replace(alpha=r.alpha[:n])
 
 
 def decision_function(x_train, y_train, alpha, b, x_test, *,

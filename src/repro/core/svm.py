@@ -5,6 +5,8 @@
     clf = SVC(engine="chunked", shrink_every=4)       # n >> 8k training
     clf = SVC(strategy="ovr")                         # one-vs-rest
     clf = SVC(decision="margin")                      # OvO summed margins
+    clf = SVC(mesh=mesh, shard="data")                # samples sharded
+    clf = SVC(mesh=mesh, shard="auto")                # hybrid per bucket
     clf.fit(X, y)                                     # binary OR multiclass
     clf.predict(Xt); clf.score(Xt, yt)
 
@@ -18,6 +20,13 @@ legacy layout). ``mesh``/``worker_axes`` shard each bucket's task axis
 over the distributed (shard_map) "MPI" layer with a greedy LPT worker
 layout; without a mesh the buckets are vmapped on the local device
 (single-GPU configuration of the paper).
+
+``shard`` picks WHICH axis of parallelism the mesh carries: ``"task"``
+(default) distributes independent binary tasks, ``"data"`` shards the
+SAMPLE axis of every solve (``smo.sharded_binary_smo`` — one big QP
+across all devices, binary fits included), and ``"auto"`` chooses per
+serving bucket: wide-and-few tasks go data-parallel, small-and-many stay
+task-parallel.
 
 All Gram computation — training AND serving — flows through
 ``repro.core.kernel_engine``; ``engine`` picks the backend ("auto" |
@@ -65,7 +74,8 @@ class SVC:
                  decision: str = "vote",
                  schedule: str = "bucketed",
                  mesh: Optional[Mesh] = None,
-                 worker_axes: tuple[str, ...] = ("workers",)):
+                 worker_axes: tuple[str, ...] = ("workers",),
+                 shard: str = "task"):
         self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
                                             degree=degree, coef0=coef0)
         self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter,
@@ -75,6 +85,9 @@ class SVC:
         self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
                            else KE.EngineConfig(backend=engine))
         self.strategy = MC.get_strategy(strategy)
+        if decision not in ("vote", "margin"):
+            raise ValueError(f"unknown OvO decision {decision!r}; "
+                             "expected 'vote' or 'margin'")
         self.decision = decision
         if schedule not in ("bucketed", "padded"):
             raise ValueError(f"unknown schedule {schedule!r}; "
@@ -82,6 +95,10 @@ class SVC:
         self.schedule = schedule
         self.mesh = mesh
         self.worker_axes = worker_axes
+        if shard not in ("task", "data", "auto"):
+            raise ValueError(f"unknown shard mode {shard!r}; "
+                             "expected 'task', 'data' or 'auto'")
+        self.shard = shard
         self._fitted = False
 
     def _serving_cfg(self) -> KE.EngineConfig:
@@ -110,10 +127,36 @@ class SVC:
         self._fitted = True
         return self
 
+    def _use_data_parallel_binary(self, n: int) -> bool:
+        """The sharded single-problem path: explicit shard="data"
+        (validated hard by the shared ``dist.validate_data_shard`` —
+        no mesh / GD / multi-axis raises instead of silently fitting
+        locally), or "auto" once the problem is wide enough to amortize
+        the per-iteration collectives."""
+        if self.shard == "data":
+            dist.validate_data_shard(self.mesh, self.worker_axes,
+                                     self.solver)
+            return True
+        if self.mesh is None or self.shard == "task":
+            return False
+        # auto: mirror _wants_data_parallel's guards — never route a
+        # single-worker mesh through the collective program
+        n_workers = int(np.prod([self.mesh.shape[a]
+                                 for a in self.worker_axes]))
+        return (self.solver == "smo" and len(self.worker_axes) == 1
+                and n_workers > 1 and n >= dist.DATA_PARALLEL_MIN_WIDTH)
+
     def _fit_binary(self, x, y, classes) -> None:
         yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
         ecfg = self.engine_cfg
-        if self.solver == "smo":
+        if self._use_data_parallel_binary(x.shape[0]):
+            r = smo.sharded_binary_smo(
+                jnp.asarray(x), jnp.asarray(yy), mesh=self.mesh,
+                axis=self.worker_axes[0], cfg=self.smo_cfg,
+                kernel=self.kernel_params, engine=ecfg)
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)
+        elif self.solver == "smo":
             r = jax.jit(
                 lambda xx, yv: smo.binary_smo(
                     xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params,
@@ -151,7 +194,8 @@ class SVC:
         fit = dist.fit_taskset(
             taskset, sched, mesh=self.mesh, worker_axes=self.worker_axes,
             solver=self.solver, smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
-            kernel=self.kernel_params, engine=self.engine_cfg)
+            kernel=self.kernel_params, engine=self.engine_cfg,
+            shard=self.shard)
         self._binary = False
         self._taskset = taskset
         self._schedule = sched

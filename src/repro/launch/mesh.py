@@ -26,6 +26,26 @@ def make_local_mesh(n_workers: int = 1, axis: str = "workers"):
     return jax.make_mesh((n_workers,), (axis,))
 
 
+def make_shard_mesh(n_shards: int | None = None, axis: str = "shards"):
+    """1-D mesh for the data-parallel single-problem SVM path
+    (``smo.sharded_binary_smo`` / ``SVC(shard="data")``): the named axis
+    carries the SAMPLE dimension of one QP, not independent tasks.
+
+    ``n_shards=None`` takes every visible device. An explicit count above
+    the visible device count raises instead of silently under-sharding.
+    """
+    n_avail = len(jax.devices())
+    if n_shards is None:
+        n_shards = n_avail
+    if n_shards > n_avail:
+        raise ValueError(
+            f"requested {n_shards} shards but only {n_avail} devices are "
+            f"visible (force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            f"jax initializes)")
+    return jax.make_mesh((n_shards,), (axis,))
+
+
 def set_mesh(mesh):
     """Version-compat ``jax.set_mesh``: jax >= 0.6 has the top-level
     context manager; on 0.4/0.5 the Mesh object itself is the context

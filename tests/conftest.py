@@ -1,8 +1,57 @@
+"""Shared test environment: multi-device host CPU, set up BEFORE jax.
+
+``--xla_force_host_platform_device_count`` only takes effect if it is in
+the environment before jax initializes its backends; setting it from an
+individual test module is order-dependent (a silent no-op whenever any
+earlier test touched jax first). This conftest is imported before every
+test module, so the flag lands exactly once, process-wide:
+
+* the suite runs on ``REPRO_TEST_DEVICES`` (default 8) forced host CPU
+  devices — multi-device code paths (shard_map task distribution, the
+  sharded single-problem SMO, dry-run meshes) are exercised in-process
+  on every run, no subprocess respawn needed;
+* tests that NEED a minimum device count declare it with
+  ``@pytest.mark.requires_devices(n)`` and are skipped (not failed)
+  when the host provides fewer;
+* the ``mesh_devices`` fixture hands back the visible device list.
+"""
 import os
 import sys
 
-# Tests run single-device (the dry-run forces 512 devices in its OWN
-# process only). Keep CPU determinism reasonable.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+_N_DEVICES = int(os.environ.get("REPRO_TEST_DEVICES", "8"))
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={_N_DEVICES}"
+    ).strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402  (env must be set before anything imports jax)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "requires_devices(n): skip unless at least n jax devices are "
+        "visible (forced host CPU devices count)")
+
+
+def pytest_runtest_setup(item):
+    marker = item.get_closest_marker("requires_devices")
+    if marker is None:
+        return
+    need = int(marker.args[0])
+    import jax  # deferred: first jax import locks the device count
+    have = jax.device_count()
+    if have < need:
+        pytest.skip(f"needs {need} devices, only {have} visible")
+
+
+@pytest.fixture
+def mesh_devices():
+    """The visible device list (jax initialized under the forced count)."""
+    import jax
+    return jax.devices()

@@ -1,32 +1,30 @@
 """Dry-run launch-path integration: lower+compile a reduced combo on a
-small forced-device mesh in a subprocess (the real 512-device sweep is
-results/dryrun_*.jsonl; this keeps the path covered in CI)."""
-import subprocess
-import sys
-import textwrap
-
+small mesh (the real 512-device sweep is results/dryrun_*.jsonl; this
+keeps the path covered in CI). Runs in-process on the forced multi-device
+host CPU that tests/conftest.py sets up before jax initializes."""
+import jax
+import jax.numpy as jnp
 import pytest
+from jax.sharding import NamedSharding
 
-_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import sys; sys.path.insert(0, "src")
-    import jax
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.configs.base import get_config, reduced, INPUT_SHAPES
-    from repro.launch.mesh import set_mesh
-    from repro.models.model import Model, abstract_init
-    from repro.sharding import rules
-    from repro.roofline.collect import collective_bytes
+from repro.configs.base import get_config, reduced
+from repro.launch.mesh import set_mesh
+from repro.models.model import Model, abstract_init
+from repro.roofline.collect import collective_bytes
+from repro.sharding import rules
 
+
+@pytest.mark.requires_devices(8)
+@pytest.mark.parametrize("arch", ["phi4_mini_3p8b", "qwen2_moe_a2p7b",
+                                  "mamba2_780m"])
+def test_reduced_dryrun_on_2x4_mesh(arch):
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    cfg = reduced(get_config("%s"))
+    cfg = reduced(get_config(arch))
     model = Model(cfg)
     params_shapes, logical = abstract_init(model)
-    shardings = jax.tree.map(
-        lambda lg: NamedSharding(mesh, rules.spec(lg, mesh)),
-        logical, is_leaf=lambda x: isinstance(x, tuple))
-    import jax.numpy as jnp
+    # exercises rules.spec for every parameter (raises on a bad rule)
+    jax.tree.map(lambda lg: NamedSharding(mesh, rules.spec(lg, mesh)),
+                 logical, is_leaf=lambda x: isinstance(x, tuple))
     batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
     if cfg.arch_type == "vlm":
         batch["vision_embeds"] = jax.ShapeDtypeStruct(
@@ -44,14 +42,4 @@ _SCRIPT = textwrap.dedent("""
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
     coll = collective_bytes(compiled.as_text())
-    print("DRYRUN_OK", coll["total_bytes"])
-""")
-
-
-@pytest.mark.parametrize("arch", ["phi4_mini_3p8b", "qwen2_moe_a2p7b",
-                                  "mamba2_780m"])
-def test_reduced_dryrun_on_2x4_mesh(arch):
-    r = subprocess.run([sys.executable, "-c", _SCRIPT % arch],
-                       capture_output=True, text=True, cwd=".",
-                       timeout=600)
-    assert "DRYRUN_OK" in r.stdout, r.stdout[-500:] + r.stderr[-2000:]
+    assert coll["total_bytes"] >= 0

@@ -1,8 +1,4 @@
 """OvO multiclass + the distributed (shard_map) MPI layer."""
-import subprocess
-import sys
-import textwrap
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -56,14 +52,12 @@ def test_svc_binary_gd_and_smo_agree():
     assert b.score(x[sel], y[sel]) == 1.0
 
 
-_DIST_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    import sys; sys.path.insert(0, "src")
-    import numpy as np, jax, jax.numpy as jnp
-    from repro.core import ovo, dist, kernels as K
-    from repro.data import load_pavia_like, normalize
-
+@pytest.mark.requires_devices(4)
+def test_distributed_equals_local_4workers():
+    """The MPI layer (shard_map over 4 forced host devices) must produce
+    bit-compatible results with the single-device vmapped fit. Runs
+    in-process: conftest.py forces the multi-device host before jax
+    initializes (the old subprocess respawn is gone)."""
     x, y = load_pavia_like(n_per_class=24, n_classes=5)
     x = normalize(x)
     kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
@@ -77,18 +71,6 @@ _DIST_SCRIPT = textwrap.dedent("""
                                atol=1e-5)
     c = ovo.n_binary_tasks(5)
     assert bool(np.asarray(fit.converged)[:c].all())
-    print("DIST_OK")
-""")
-
-
-def test_distributed_equals_local_4workers():
-    """The MPI layer (shard_map over 4 forced host devices) must produce
-    bit-compatible results with the single-device vmapped fit. Runs in a
-    subprocess because the device count is locked at jax init."""
-    r = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],
-                       capture_output=True, text=True, cwd=".",
-                       timeout=600)
-    assert "DIST_OK" in r.stdout, r.stdout + r.stderr
 
 
 def test_task_padding_for_worker_divisibility():

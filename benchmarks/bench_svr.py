@@ -1,0 +1,69 @@
+"""epsilon-SVR benchmark: SMO vs projected-GD on the insensitive dual.
+
+The regression analog of the paper's central comparison (Tables III/V):
+the explicit working-set solver against the fixed-step autodiff baseline
+on the SAME dual QP — here the doubled-variable epsilon-SVR instance of
+the generalized ``smo.solve_qp`` core. Emits one JSON line per
+(n, solver) cell: wall seconds, training MSE, iterations, and the
+SMO-over-GD speedup, via ``common.emit_json``.
+
+    PYTHONPATH=src python -m benchmarks.run --only svr [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit_json, timeit
+from repro.core import gd, kernels as K, smo
+from repro.data import make_synth_regression
+
+GD_STEPS = 1000
+EPSILON = 0.1
+SIZES = (256, 512, 1024)
+
+
+def _mse(x, y, beta, b, kp):
+    pred = smo.decision_function(jnp.asarray(x),
+                                 jnp.ones(x.shape[0], jnp.float32),
+                                 beta, b, jnp.asarray(x), kernel=kp)
+    return float(np.mean((np.asarray(pred) - y) ** 2))
+
+
+def bench_one(n: int) -> None:
+    x, y = make_synth_regression(n, 8, noise=0.05, seed=0)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    smo_fn = jax.jit(lambda a, b: smo.svr_smo(
+        a, b, epsilon=EPSILON, cfg=smo.SMOConfig(), kernel=kp))
+    gd_fn = jax.jit(lambda a, b: gd.svr_gd(
+        a, b, epsilon=EPSILON, cfg=gd.GDConfig(lr=0.01, steps=GD_STEPS),
+        kernel=kp))
+
+    t_smo = timeit(smo_fn, xj, yj)
+    t_gd = timeit(gd_fn, xj, yj)
+    r_smo = smo_fn(xj, yj)
+    r_gd = gd_fn(xj, yj)
+
+    emit_json({"bench": "svr", "n": n, "solver": "smo",
+               "seconds": t_smo, "epsilon": EPSILON,
+               "n_iter": int(r_smo.n_iter),
+               "mse": _mse(x, y, r_smo.beta, r_smo.b, kp),
+               "speedup_vs_gd": t_gd / t_smo})
+    emit_json({"bench": "svr", "n": n, "solver": "gd",
+               "seconds": t_gd, "epsilon": EPSILON,
+               "n_iter": GD_STEPS,
+               "mse": _mse(x, y, r_gd.beta, r_gd.b, kp)})
+
+
+def main(quick: bool = False) -> None:
+    print("# beyond-paper: epsilon-SVR, SMO vs projected-GD "
+          "(JSON lines)")
+    for n in (SIZES[:1] if quick else SIZES):
+        bench_one(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,9 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
                                       sharded — needs a multi-device
                                       process, e.g. XLA_FLAGS=
                                       --xla_force_host_platform_device_count=8)
+  beyond-paper  -> bench_svr         (epsilon-SVR SMO vs projected-GD
+                                      wall time + MSE, JSON lines;
+                                      --only svr)
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
                          "kernels; opt-in extras: large_n,scheduler,"
-                         "sharded")
+                         "sharded,svr")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -64,6 +67,10 @@ def main(argv=None) -> None:
         # opt-in: single-problem strong scaling over forced host devices
         from benchmarks import bench_sharded
         bench_sharded.main(quick=args.quick)
+    if only is not None and "svr" in only:
+        # opt-in: the regression analog of the SMO-vs-GD comparison
+        from benchmarks import bench_svr
+        bench_svr.main(quick=args.quick)
 
 
 if __name__ == "__main__":

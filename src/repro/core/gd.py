@@ -18,6 +18,14 @@ Loss (maximizing the soft-margin dual by gradient DESCENT on its negation):
 
     L(a) = -[ 1'a - 1/2 a'(yy' * K)a ] + lam_eq * (y'a)^2
     a clipped to [0, C] after every step (projected GD).
+
+``svr_gd`` is the regression analog — the same projected fixed-step loop
+on the epsilon-insensitive dual, in the doubled-variable layout of
+``core.smo.svr_smo`` (signs s = [+1; -1] over [x; x], linear term
+p = [eps - y; eps + y], box [0, C]):
+
+    L(b) = 1/2 (sb)' K (sb) + p'b + lam_eq * (s'b)^2
+    b clipped to [0, C] after every step.
 """
 from __future__ import annotations
 
@@ -57,6 +65,15 @@ def _dual_loss_mv(alpha, y, matvec, eq_penalty, n_valid):
 
 def _dual_loss(alpha, y, gram, eq_penalty, n_valid):
     return _dual_loss_mv(alpha, y, lambda v: gram @ v, eq_penalty, n_valid)
+
+
+def _qp_loss_mv(alpha, y, p, matvec, eq_penalty, n_valid):
+    """Penalized negated dual of the general box QP (p = -1 recovers
+    ``_dual_loss_mv``): 1/2 (ya)'K(ya) + p'a + pen * (y'a)^2 / n."""
+    ay = alpha * y
+    eq = jnp.sum(ay)
+    return (0.5 * ay @ matvec(ay) + p @ alpha
+            + eq_penalty * eq * eq / n_valid)
 
 
 def binary_gd(x: jax.Array,
@@ -117,3 +134,86 @@ def _estimate_bias(alpha, y, matvec, mask, c):
     use = jnp.where(jnp.any(free), free, anysv)
     cnt = jnp.maximum(jnp.sum(use), 1)
     return jnp.sum(jnp.where(use, y - g, 0.0)) / cnt
+
+
+class SVRGDResult(NamedTuple):
+    beta: jax.Array        # (n,) alpha - alpha*: K(x_i, .) coefficients
+    b: jax.Array           # () bias, prediction = sum beta_i K(x_i,.) + b
+    alpha: jax.Array       # (2n,) raw doubled multipliers [alpha; alpha*]
+    loss_curve: jax.Array  # (steps,) training loss per step
+    n_iter: jax.Array
+
+
+def svr_gd(x: jax.Array,
+           y: jax.Array,
+           mask: Optional[jax.Array] = None,
+           *,
+           epsilon: float = 0.1,
+           cfg: GDConfig = GDConfig(),
+           kernel: K.KernelParams = K.KernelParams(),
+           engine: Optional[KE.EngineConfig | str] = None) -> SVRGDResult:
+    """Train one epsilon-SVR by projected gradient descent on the
+    epsilon-insensitive dual — the regression analog of the paper's
+    TensorFlow baseline: a generic fixed-step optimizer re-evaluating
+    the full (doubled) Gram interaction every step.
+
+    The engine is built on the DOUBLED (2n, d) sample matrix (same
+    layout as ``core.smo.svr_smo``), so pass an ``EngineConfig`` or
+    backend name, never a pre-bound engine.
+    """
+    if isinstance(engine, KE.KernelEngine):
+        raise ValueError(
+            "svr_gd solves the doubled 2n-variable dual and must build "
+            "its engine on [x; x]; pass an EngineConfig or backend name, "
+            f"not a bound engine ({type(engine).__name__})")
+    n = x.shape[0]
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if mask is None:
+        mask = jnp.ones((n,), dtype=bool)
+    # the doubled layout is owned by core.smo — both solvers must
+    # optimize the exact same QP (box bounds are cfg.C via the clip)
+    from repro.core.smo import _svr_spec
+    s, p, _, _ = _svr_spec(y, epsilon, cfg.C)
+    x2 = jnp.concatenate([x, x], axis=0)
+    y2 = jnp.concatenate([y, y])
+    m2 = jnp.concatenate([mask, mask])
+
+    if engine is None:
+        eng = KE.DenseKernelEngine(x2, kernel)
+    else:
+        eng = KE.make_engine(x2, kernel, engine)
+    matvec = eng.matvec
+
+    n_valid = jnp.maximum(jnp.sum(m2.astype(jnp.float32)), 1.0)
+    grad_fn = jax.grad(_qp_loss_mv)
+
+    def step(alpha, _):
+        g = grad_fn(alpha, s, p, matvec, cfg.eq_penalty, n_valid)
+        alpha = alpha - cfg.lr * g
+        alpha = jnp.clip(alpha, 0.0, cfg.C) * m2   # projection onto box
+        return alpha, _qp_loss_mv(alpha, s, p, matvec, cfg.eq_penalty,
+                                  n_valid)
+
+    alpha0 = jnp.zeros((2 * n,), jnp.float32)
+    alpha, losses = jax.lax.scan(step, alpha0, None, length=cfg.steps)
+
+    b = _estimate_svr_bias(alpha, s, y2, matvec, m2, cfg.C, epsilon)
+    return SVRGDResult(beta=alpha[:n] - alpha[n:], b=b, alpha=alpha,
+                       loss_curve=losses,
+                       n_iter=jnp.asarray(cfg.steps, jnp.int32))
+
+
+def _estimate_svr_bias(alpha, s, y2, matvec, mask, c, epsilon):
+    """b from free doubled multipliers: a free alpha_i sits ON the upper
+    tube edge (y_i - f(x_i) = eps), a free alpha*_i on the lower one
+    (= -eps), i.e. b = y_i - g_i - s_i * eps; falls back to all SVs,
+    then (degenerate all-zero dual) to every valid sample — which
+    averages out to mean(y)."""
+    g = matvec(alpha * s)                  # prediction without bias
+    free = mask & (alpha > 1e-6) & (alpha < c - 1e-6)
+    anysv = mask & (alpha > 1e-6)
+    use = jnp.where(jnp.any(free), free,
+                    jnp.where(jnp.any(anysv), anysv, mask))
+    cnt = jnp.maximum(jnp.sum(use), 1)
+    return jnp.sum(jnp.where(use, y2 - g - s * epsilon, 0.0)) / cnt

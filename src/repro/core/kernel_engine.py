@@ -97,6 +97,13 @@ inside the jitted solver) or a bound engine from ``make_engine``:
 ``EngineConfig``, and after ``fit`` serves predictions from a compacted
 support-vector set (alpha > 0 rows only), so serving cost scales with
 #SV rather than n.
+
+Regression rides the same engines: the epsilon-SVR solvers
+(``core.smo.svr_smo`` / ``core.gd.svr_gd`` / ``SVR``) bind their engine
+to the DOUBLED sample matrix [x; x] — the doubled QP's Gram is exactly
+the Gram of [x; x], so no backend needs any regression-specific code.
+The only knob that reads differently there is ``dense_limit``: the
+auto dense/chunked switch sees 2n rows.
 """
 from __future__ import annotations
 

@@ -10,6 +10,20 @@
     clf.fit(X, y)                                     # binary OR multiclass
     clf.predict(Xt); clf.score(Xt, yt)
 
+    reg = SVR(kernel="rbf", C=1.0, epsilon=0.1)       # epsilon-SVR
+    reg = SVR(solver="gd")                            # projected-GD dual
+    reg = SVR(engine="chunked", shrink_every=4)       # large-n regression
+    reg = SVR(mesh=mesh, shard="data")                # doubled axis sharded
+    reg.fit(X, y).predict(Xt); reg.score(Xt, yt)      # R^2
+
+``SVR`` rides the exact same stack as binary ``SVC``: the generalized
+QP core (``smo.solve_qp`` with the doubled-variable epsilon-SVR spec),
+every ``KernelEngine`` backend, adaptive shrinking, and the
+data-parallel sharded solver — the regression solve is ONE QP over the
+doubled (2n) sample axis, so ``shard="data"`` shards that axis over the
+mesh. Serving is compacted exactly like binary SVC: only rows with
+|alpha - alpha*| > 0 are kept.
+
 Multiclass fits go through the strategy layer (``repro.core.multiclass``):
 ``strategy`` picks the decomposition ("ovo" pairwise, "ovr" one-vs-rest),
 ``decision`` the OvO aggregation ("vote" majority, "margin" summed
@@ -38,6 +52,7 @@ the training-set size.
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -50,6 +65,33 @@ from repro.core import multiclass as MC
 from repro.core import smo
 
 _SV_EPS = 1e-8
+
+
+@lru_cache(maxsize=64)
+def _jitted_binary_fit(solver: str, cfg, kernel, ecfg):
+    """Jitted binary solver, cached per static config: jit keys its
+    cache on the callable object, so wrapping a fresh lambda per ``fit``
+    would retrace and recompile every call (cf.
+    ``smo._sharded_smo_program``) — a warm-up fit would warm nothing."""
+    fn = smo.binary_smo if solver == "smo" else gd.binary_gd
+    return jax.jit(lambda xx, yv: fn(xx, yv, cfg=cfg, kernel=kernel,
+                                     engine=ecfg))
+
+
+@lru_cache(maxsize=64)
+def _jitted_svr_fit(solver: str, epsilon: float, cfg, kernel, ecfg):
+    """Jitted epsilon-SVR solver, cached per static config (see
+    ``_jitted_binary_fit``)."""
+    fn = smo.svr_smo if solver == "smo" else gd.svr_gd
+    return jax.jit(lambda xx, yv: fn(xx, yv, epsilon=epsilon, cfg=cfg,
+                                     kernel=kernel, engine=ecfg))
+
+
+def _serving_cfg(engine_cfg: KE.EngineConfig) -> KE.EngineConfig:
+    """Serving never needs the (sv, sv) training Gram, so dense/auto
+    degrade to chunked; an explicit pallas choice is honored."""
+    backend = ("pallas" if engine_cfg.backend == "pallas" else "chunked")
+    return dataclasses.replace(engine_cfg, backend=backend, cache_slots=0)
 
 
 class _ServingBucket(NamedTuple):
@@ -102,12 +144,7 @@ class SVC:
         self._fitted = False
 
     def _serving_cfg(self) -> KE.EngineConfig:
-        """Serving never needs the (sv, sv) training Gram, so dense/auto
-        degrade to chunked; an explicit pallas choice is honored."""
-        backend = ("pallas" if self.engine_cfg.backend == "pallas"
-                   else "chunked")
-        return dataclasses.replace(self.engine_cfg, backend=backend,
-                                   cache_slots=0)
+        return _serving_cfg(self.engine_cfg)
 
     def _serving_engine(self, sv: jax.Array) -> KE.KernelEngine:
         return KE.make_engine(sv, self.kernel_params, self._serving_cfg())
@@ -157,19 +194,15 @@ class SVC:
             self.n_iter_ = int(r.n_iter)
             self.converged_ = bool(r.converged)
         elif self.solver == "smo":
-            r = jax.jit(
-                lambda xx, yv: smo.binary_smo(
-                    xx, yv, cfg=self.smo_cfg, kernel=self.kernel_params,
-                    engine=ecfg)
-            )(jnp.asarray(x), jnp.asarray(yy))
+            r = _jitted_binary_fit("smo", self.smo_cfg,
+                                   self.kernel_params, ecfg)(
+                jnp.asarray(x), jnp.asarray(yy))
             self.n_iter_ = int(r.n_iter)
             self.converged_ = bool(r.converged)
         else:
-            r = jax.jit(
-                lambda xx, yv: gd.binary_gd(
-                    xx, yv, cfg=self.gd_cfg, kernel=self.kernel_params,
-                    engine=ecfg)
-            )(jnp.asarray(x), jnp.asarray(yy))
+            r = _jitted_binary_fit("gd", self.gd_cfg,
+                                   self.kernel_params, ecfg)(
+                jnp.asarray(x), jnp.asarray(yy))
             self.n_iter_ = int(r.n_iter)
             self.converged_ = True
         self._binary = True
@@ -276,3 +309,113 @@ class SVC:
 
     def score(self, xt: np.ndarray, yt: np.ndarray) -> float:
         return float(np.mean(self.predict(xt) == np.asarray(yt)))
+
+
+class SVR:
+    """epsilon-insensitive Support Vector Regression on the generalized
+    SMO core — one doubled-variable QP through the same engine /
+    shrinking / sharding stack as binary ``SVC`` (module docstring)."""
+
+    def __init__(self, *, kernel: str = "rbf", C: float = 1.0,
+                 epsilon: float = 0.1,
+                 gamma: float = -1.0, degree: int = 3, coef0: float = 0.0,
+                 tol: float = 1e-3, max_iter: int = 100_000,
+                 solver: str = "smo", gd_lr: float = 0.01,
+                 gd_steps: int = 300,
+                 engine: str | KE.EngineConfig = "auto",
+                 shrink_every: int = 0,
+                 mesh: Optional[Mesh] = None,
+                 worker_axes: tuple[str, ...] = ("workers",),
+                 shard: str = "task"):
+        self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
+                                            degree=degree, coef0=coef0)
+        self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter,
+                                     shrink_every=shrink_every)
+        self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
+        self.epsilon = float(epsilon)
+        self.solver = solver
+        self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
+                           else KE.EngineConfig(backend=engine))
+        self.mesh = mesh
+        self.worker_axes = worker_axes
+        if shard not in ("task", "data", "auto"):
+            raise ValueError(f"unknown shard mode {shard!r}; "
+                             "expected 'task', 'data' or 'auto'")
+        self.shard = shard
+        self._fitted = False
+
+    def _use_data_parallel(self, n: int) -> bool:
+        """Mirrors ``SVC._use_data_parallel_binary`` on the DOUBLED
+        sample axis (the sharded program sees 2n rows)."""
+        if self.shard == "data":
+            dist.validate_data_shard(self.mesh, self.worker_axes,
+                                     self.solver)
+            return True
+        if self.mesh is None or self.shard == "task":
+            return False
+        n_workers = int(np.prod([self.mesh.shape[a]
+                                 for a in self.worker_axes]))
+        return (self.solver == "smo" and len(self.worker_axes) == 1
+                and n_workers > 1
+                and 2 * n >= dist.DATA_PARALLEL_MIN_WIDTH)
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "SVR":
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        self.kernel_params = K.resolve_gamma(self.kernel_params,
+                                             jnp.asarray(x))
+        eps, ecfg = self.epsilon, self.engine_cfg
+        if self._use_data_parallel(x.shape[0]):
+            r = smo.sharded_svr_smo(
+                jnp.asarray(x), jnp.asarray(y), epsilon=eps,
+                mesh=self.mesh, axis=self.worker_axes[0],
+                cfg=self.smo_cfg, kernel=self.kernel_params, engine=ecfg)
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)
+        elif self.solver == "smo":
+            r = _jitted_svr_fit("smo", eps, self.smo_cfg,
+                                self.kernel_params, ecfg)(
+                jnp.asarray(x), jnp.asarray(y))
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)
+        else:
+            r = _jitted_svr_fit("gd", eps, self.gd_cfg,
+                                self.kernel_params, ecfg)(
+                jnp.asarray(x), jnp.asarray(y))
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = True
+            self.loss_curve_ = np.asarray(r.loss_curve)
+        self.beta_ = np.asarray(r.beta)
+        self.b_ = float(r.b)
+        self.alpha_raw_ = np.asarray(r.alpha)   # (2n,) [alpha; alpha*]
+        # serving state: compacted support-vector set only
+        sv = np.abs(self.beta_) > _SV_EPS
+        self.support_ = np.where(sv)[0]
+        self.n_support_ = int(sv.sum())
+        self.support_vectors_ = x[sv]
+        self.dual_coef_ = self.beta_[sv].astype(np.float32)
+        self._fitted = True
+        return self
+
+    # ------------------------------------------------------------- predict
+    def predict(self, xt: np.ndarray) -> np.ndarray:
+        assert self._fitted
+        xt = jnp.asarray(np.asarray(xt, np.float32))
+        if self.n_support_ == 0:   # every sample inside the tube
+            return np.full(xt.shape[0], self.b_, np.float32)
+        eng = KE.make_engine(jnp.asarray(self.support_vectors_),
+                             self.kernel_params,
+                             _serving_cfg(self.engine_cfg))
+        pred = eng.decide(xt, jnp.asarray(self.dual_coef_), self.b_)
+        return np.asarray(pred)
+
+    def score(self, xt: np.ndarray, yt: np.ndarray) -> float:
+        """Coefficient of determination R^2 (sklearn convention)."""
+        yt = np.asarray(yt, np.float64)
+        resid = yt - np.asarray(self.predict(xt), np.float64)
+        ss_res = float(np.sum(resid ** 2))
+        ss_tot = float(np.sum((yt - yt.mean()) ** 2))
+        if ss_tot == 0.0:
+            return 1.0 if ss_res == 0.0 else 0.0
+        return 1.0 - ss_res / ss_tot

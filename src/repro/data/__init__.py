@@ -1,8 +1,9 @@
 from repro.data.iris import load_iris
 from repro.data.synth import (load_breast_cancer_like, load_pavia_like,
-                              make_blobs, make_imbalanced_blobs)
+                              make_blobs, make_imbalanced_blobs,
+                              make_synth_regression)
 from repro.data.pipeline import normalize, train_test_split
 
 __all__ = ["load_iris", "load_breast_cancer_like", "load_pavia_like",
-           "make_blobs", "make_imbalanced_blobs", "normalize",
-           "train_test_split"]
+           "make_blobs", "make_imbalanced_blobs", "make_synth_regression",
+           "normalize", "train_test_split"]

@@ -14,6 +14,8 @@ matrix are what matters.
 * ``load_breast_cancer_like`` — 569 samples, 32 features (30 informative
   + id-like noise), 2 classes with partial overlap.
 * ``make_blobs`` — generic Gaussian clusters.
+* ``make_synth_regression`` — smooth nonlinear regression targets for
+  the epsilon-SVR subsystem.
 """
 from __future__ import annotations
 
@@ -55,6 +57,34 @@ def make_imbalanced_blobs(class_sizes: "list[int] | tuple[int, ...]",
     y = np.concatenate(ys, 0)
     perm = rng.permutation(len(y))
     return x[perm], y[perm]
+
+
+def make_synth_regression(n_samples: int, n_features: int = 6, *,
+                          kind: str = "sinc", noise: float = 0.1,
+                          seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Regression fixture for the epsilon-SVR subsystem: a smooth
+    nonlinear (or exactly linear) function of a random 1-D projection of
+    x, plus Gaussian noise of scale ``noise``.
+
+    * ``kind="sinc"``   — sinc(2t) + 0.5 sin(t): the classic smooth
+      RBF-SVR target (bounded, infinitely differentiable, non-monotone).
+    * ``kind="linear"`` — t itself: the analytic case a linear-kernel
+      SVR must recover exactly.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-2.0, 2.0, size=(n_samples, n_features))
+    w = rng.normal(size=(n_features,))
+    w /= np.linalg.norm(w)
+    t = x @ w
+    if kind == "sinc":
+        y = np.sinc(2.0 * t) + 0.5 * np.sin(t)
+    elif kind == "linear":
+        y = t
+    else:
+        raise ValueError(f"unknown regression target {kind!r}; "
+                         "expected 'sinc' or 'linear'")
+    y = y + noise * rng.normal(size=n_samples)
+    return x.astype(np.float32), y.astype(np.float32)
 
 
 def load_pavia_like(n_per_class: int = 800, *, n_classes: int = 9,

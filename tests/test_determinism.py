@@ -1,0 +1,66 @@
+"""Determinism regression: same data + config ==> bit-identical
+multipliers and bias across repeated fits AND across a jit cache clear.
+
+Guards two things: (1) nothing in the fit path depends on ambient state
+(RNG, dict ordering, warm caches); (2) the hoisted static-config trace
+caches (``dist._fit_many`` from PR 2, ``smo._sharded_smo_program``)
+return programs whose recompilation reproduces the same bits — a cleared
+cache must not change results."""
+import numpy as np
+import jax
+
+from repro.core.svm import SVC, SVR
+from repro.data import make_blobs, make_synth_regression, normalize
+
+
+def _binary_data():
+    x, y = make_blobs(60, 2, 5, sep=1.5, seed=11)
+    return normalize(x), y
+
+
+def _multiclass_data():
+    x, y = make_blobs(40, 3, 5, sep=2.0, seed=12)
+    return normalize(x), y
+
+
+def _fit_svc_binary():
+    x, y = _binary_data()
+    clf = SVC(kernel="rbf", C=1.0).fit(x, y)
+    return clf.alpha_.copy(), clf.b_, clf.n_iter_
+
+
+def _fit_svc_multiclass():
+    x, y = _multiclass_data()
+    clf = SVC(kernel="rbf", C=1.0).fit(x, y)
+    return (np.asarray(clf._fit.alpha).copy(),
+            np.asarray(clf._fit.b).copy())
+
+
+def _fit_svr():
+    x, y = make_synth_regression(70, 3, kind="sinc", noise=0.05, seed=13)
+    reg = SVR(kernel="rbf", epsilon=0.1).fit(x, y)
+    return reg.beta_.copy(), reg.b_, reg.alpha_raw_.copy()
+
+
+def _assert_runs_identical(fit_fn):
+    first = fit_fn()
+    again = fit_fn()                 # warm jit caches
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    jax.clear_caches()               # force full retrace + recompile
+    cold = fit_fn()
+    for a, b in zip(first, cold):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_svc_binary_bit_identical():
+    _assert_runs_identical(_fit_svc_binary)
+
+
+def test_svc_multiclass_bit_identical():
+    # exercises the lru-cached _fit_many program across the cache clear
+    _assert_runs_identical(_fit_svc_multiclass)
+
+
+def test_svr_bit_identical():
+    _assert_runs_identical(_fit_svr)

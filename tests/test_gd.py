@@ -1,0 +1,93 @@
+"""GD dual baseline (core/gd.py): optimization-trajectory properties.
+
+The TF-baseline solvers were previously only tested through endpoint
+agreement with SMO; these tests pin down the trajectory itself — the
+loss curve must descend monotonically once past the warmup transient,
+and the projection must hold the box constraint at EVERY step (checked
+by re-running to increasing step counts: step k's final state IS the
+trajectory point k of a deterministic fixed-step loop)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import gd, kernels as K
+from repro.data import load_iris, make_synth_regression, normalize
+
+WARMUP = 50
+
+
+def _binary_iris():
+    x, y = load_iris()
+    x = normalize(x)
+    sel = y != 2
+    return x[sel], np.where(y[sel] == 0, 1.0, -1.0).astype(np.float32)
+
+
+def test_binary_loss_monotone_after_warmup():
+    x, y = _binary_iris()
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    r = gd.binary_gd(jnp.asarray(x), jnp.asarray(y),
+                     cfg=gd.GDConfig(lr=0.01, steps=400), kernel=kp)
+    losses = np.asarray(r.loss_curve, np.float64)
+    diffs = np.diff(losses[WARMUP:])
+    # descent on a convex quadratic with a stable lr: no step may
+    # increase the loss beyond f32 noise
+    assert np.all(diffs <= 1e-5), f"max increase {diffs.max():.2e}"
+    assert losses[-1] < losses[WARMUP]
+
+
+def test_svr_loss_monotone_after_warmup():
+    x, y = make_synth_regression(100, 3, kind="sinc", noise=0.05, seed=0)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    r = gd.svr_gd(jnp.asarray(x), jnp.asarray(y), epsilon=0.1,
+                  cfg=gd.GDConfig(lr=0.01, steps=400), kernel=kp)
+    losses = np.asarray(r.loss_curve, np.float64)
+    diffs = np.diff(losses[WARMUP:])
+    assert np.all(diffs <= 1e-5), f"max increase {diffs.max():.2e}"
+    assert losses[-1] < losses[WARMUP]
+
+
+def test_binary_projection_invariant_every_step():
+    """0 <= alpha <= C after every step of the projected loop. The loop
+    is deterministic with a static step count, so the state after k
+    steps equals trajectory point k — sampling k covers the trajectory
+    without instrumenting the scan."""
+    x, y = _binary_iris()
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    c = 0.7
+    for steps in (1, 2, 5, 13, 40, 150):
+        r = gd.binary_gd(jnp.asarray(x), jnp.asarray(y),
+                         cfg=gd.GDConfig(C=c, lr=0.05, steps=steps),
+                         kernel=kp)
+        a = np.asarray(r.alpha)
+        assert a.min() >= 0.0 and a.max() <= c, f"step {steps}"
+
+
+def test_svr_projection_invariant_every_step():
+    x, y = make_synth_regression(80, 2, kind="sinc", noise=0.05, seed=1)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    c = 0.5
+    for steps in (1, 2, 5, 13, 40, 150):
+        r = gd.svr_gd(jnp.asarray(x), jnp.asarray(y), epsilon=0.1,
+                      cfg=gd.GDConfig(C=c, lr=0.05, steps=steps),
+                      kernel=kp)
+        a = np.asarray(r.alpha)           # (2n,) doubled multipliers
+        assert a.min() >= 0.0 and a.max() <= c, f"step {steps}"
+        np.testing.assert_allclose(np.asarray(r.beta),
+                                   a[:80] - a[80:], atol=0.0)
+
+
+def test_svr_gd_masked_samples_inert():
+    """Masked samples (both doubled halves) keep alpha = 0 and do not
+    move the fit."""
+    x, y = make_synth_regression(60, 2, kind="sinc", noise=0.05, seed=2)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    cfg = gd.GDConfig(lr=0.01, steps=200)
+    r0 = gd.svr_gd(jnp.asarray(x[:50]), jnp.asarray(y[:50]), epsilon=0.1,
+                   cfg=cfg, kernel=kp)
+    mask = np.r_[np.ones(50, bool), np.zeros(10, bool)]
+    r1 = gd.svr_gd(jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask),
+                   epsilon=0.1, cfg=cfg, kernel=kp)
+    a1 = np.asarray(r1.alpha).reshape(2, 60)
+    assert np.all(a1[:, 50:] == 0.0)
+    np.testing.assert_allclose(np.asarray(r1.beta[:50]),
+                               np.asarray(r0.beta), rtol=1e-4, atol=1e-5)

@@ -118,6 +118,7 @@ def test_shrinking_enabled_single_problem():
     _assert_equivalent(ref, got, x=x, yy=yy, kp=kp)
 
 
+@pytest.mark.slow
 @pytest.mark.requires_devices(4)
 def test_acceptance_n4096_rbf_4shards():
     """The ISSUE acceptance problem: n >= 4096 RBF on 4 forced host
@@ -144,7 +145,7 @@ def _split_selection(f, alpha, y, mask, c, n_shards):
     for p in range(n_shards):
         sl = slice(p * n_local, (p + 1) * n_local)
         b_up, i_up, b_low, i_low = smo._selection(
-            f[sl], alpha[sl], y[sl], mask[sl], c)
+            f[sl], alpha[sl], y[sl], mask[sl], 0.0, c)
         ups.append(b_up)
         iups.append(p * n_local + i_up)
         lows.append(b_low)
@@ -170,7 +171,7 @@ def test_wss_reduction_matches_unsharded_seeded():
             [0.0, 1.0, 0.5, 1e-8, 1.0 - 1e-8], size=n), jnp.float32)
         y = jnp.asarray(rng.choice([-1.0, 1.0], size=n), jnp.float32)
         mask = jnp.asarray(rng.random(n) < 0.8)
-        want = smo._selection(f, alpha, y, mask, 1.0)
+        want = smo._selection(f, alpha, y, mask, 0.0, 1.0)
         got = _split_selection(f, alpha, y, mask, 1.0, n_shards)
         for w, g in zip(want, got):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g),
@@ -186,7 +187,7 @@ def test_wss_reduction_all_masked_shard():
     alpha = jnp.zeros(n, jnp.float32)
     mask = jnp.asarray(np.r_[np.zeros(n_local, bool), np.ones(n - n_local,
                                                               bool)])
-    want = smo._selection(f, alpha, y, mask, 1.0)
+    want = smo._selection(f, alpha, y, mask, 0.0, 1.0)
     got = _split_selection(f, alpha, y, mask, 1.0, n_shards)
     for w, g in zip(want, got):
         np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
@@ -233,7 +234,7 @@ if _HAVE_HYPOTHESIS:
         n_shards, f, alpha, y, mask = case
         f, alpha = jnp.asarray(f), jnp.asarray(alpha)
         y, mask = jnp.asarray(y), jnp.asarray(mask)
-        want = smo._selection(f, alpha, y, mask, 1.0)
+        want = smo._selection(f, alpha, y, mask, 0.0, 1.0)
         got = _split_selection(f, alpha, y, mask, 1.0, n_shards)
         for w, g in zip(want, got):
             np.testing.assert_array_equal(np.asarray(w), np.asarray(g))

@@ -1,0 +1,204 @@
+"""epsilon-SVR correctness: analytic fixtures, tube-membership KKT
+structure, SMO-vs-GD dual agreement, interior-point invariance (seeded +
+hypothesis), and sharded-vs-unsharded equivalence."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gd, kernels as K, smo
+from repro.core.svm import SVR
+from repro.data import make_synth_regression
+from repro.launch.mesh import make_shard_mesh
+
+SV_EPS = 1e-6
+
+
+def _predict(x_train, beta, b, z, kp):
+    ones = jnp.ones(np.asarray(x_train).shape[0], jnp.float32)
+    return np.asarray(smo.decision_function(
+        jnp.asarray(x_train), ones, jnp.asarray(beta), b,
+        jnp.asarray(z), kernel=kp))
+
+
+class TestAnalytic:
+    def test_two_point_linear_exact(self):
+        """x = [0, 1], y = [0, 2], eps = 0.5, linear kernel, large C:
+        the flattest tube function is f(z) = z + 0.5 (both points sit ON
+        the tube boundary), with the unique dual beta = [-1, +1]."""
+        x = np.array([[0.0], [1.0]], np.float32)
+        y = np.array([0.0, 2.0], np.float32)
+        r = smo.svr_smo(jnp.asarray(x), jnp.asarray(y), epsilon=0.5,
+                        cfg=smo.SMOConfig(C=10.0),
+                        kernel=K.KernelParams(name="linear"))
+        assert bool(r.converged)
+        np.testing.assert_allclose(np.asarray(r.beta), [-1.0, 1.0],
+                                   atol=5e-3)
+        assert abs(float(r.b) - 0.5) <= 5e-3
+        pred = _predict(x, r.beta, r.b, np.array([[0.0], [0.5], [1.0]],
+                                                 np.float32),
+                        K.KernelParams(name="linear"))
+        np.testing.assert_allclose(pred, [0.5, 1.0, 1.5], atol=1e-2)
+
+    def test_all_inside_tube_degenerate(self):
+        """When every target fits inside one 2*eps tube the dual optimum
+        is beta = 0 and the midpoint bias (max(y)+min(y))/2 — the SVR
+        analog of a constant classifier."""
+        x = np.array([[0.0], [0.3], [0.6], [1.0]], np.float32)
+        y = np.array([0.0, 0.05, -0.05, 0.02], np.float32)
+        reg = SVR(kernel="rbf", gamma=0.5, epsilon=0.2).fit(x, y)
+        assert reg.n_support_ == 0
+        assert abs(reg.b_ - 0.0) <= 1e-3     # (max + min) / 2
+        np.testing.assert_allclose(reg.predict(x),
+                                   np.full(4, reg.b_), atol=1e-6)
+
+    def test_tube_membership_structure(self):
+        """KKT structure of the fit: strict tube-interior points carry
+        beta = 0; free multipliers sit ON the tube boundary; residuals
+        beyond the tube force |beta| = C."""
+        x, y = make_synth_regression(150, 2, kind="sinc", noise=0.1,
+                                     seed=3)
+        eps, c = 0.15, 1.0
+        reg = SVR(kernel="rbf", C=c, epsilon=eps).fit(x, y)
+        assert reg.converged_
+        resid = np.abs(np.asarray(y, np.float64)
+                       - np.asarray(reg.predict(x), np.float64))
+        beta = np.asarray(reg.beta_, np.float64)
+        tol = 5e-2
+        interior = resid < eps - tol
+        assert np.all(np.abs(beta[interior]) <= 1e-5)
+        free = (np.abs(beta) > 1e-5) & (np.abs(beta) < c - 1e-5)
+        if free.any():
+            np.testing.assert_allclose(resid[free], eps, atol=tol)
+        outside = resid > eps + tol
+        assert np.all(np.abs(beta[outside]) >= c - 1e-5)
+
+
+class TestAgainstGD:
+    def test_same_dual_objective_as_gd(self):
+        """SMO (explicit) and projected GD (the TF-baseline analog)
+        optimize the same epsilon-insensitive dual; GD's soft equality
+        penalty may leave it slightly above/below the hard-constrained
+        optimum."""
+        x, y = make_synth_regression(120, 3, kind="sinc", noise=0.05,
+                                     seed=1)
+        eps = 0.1
+        kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+        n = x.shape[0]
+        g2 = np.tile(np.asarray(K.make_gram_fn(kp)(
+            jnp.asarray(x), jnp.asarray(x)), np.float64), (2, 2))
+        s = np.r_[np.ones(n), -np.ones(n)].astype(np.float32)
+        p = np.r_[eps - y, eps + y].astype(np.float32)
+
+        rs = smo.svr_smo(jnp.asarray(x), jnp.asarray(y), epsilon=eps,
+                         kernel=kp)
+        rg = gd.svr_gd(jnp.asarray(x), jnp.asarray(y), epsilon=eps,
+                       cfg=gd.GDConfig(lr=0.01, steps=4000), kernel=kp)
+        o_smo = float(smo.qp_objective(np.asarray(rs.alpha), s, p, g2))
+        o_gd = float(smo.qp_objective(np.asarray(rg.alpha), s, p, g2))
+        eq_violation = abs(float(jnp.sum(rg.alpha * jnp.asarray(s))))
+        assert o_gd <= o_smo + max(0.05 * abs(o_smo),
+                                   2 * eq_violation + 0.02)
+        assert o_gd >= 0.8 * o_smo - 0.02
+
+    def test_gd_predictions_track_smo(self):
+        x, y = make_synth_regression(150, 2, kind="sinc", noise=0.05,
+                                     seed=2)
+        r_smo = SVR(epsilon=0.1, solver="smo").fit(x, y)
+        r_gd = SVR(epsilon=0.1, solver="gd", gd_steps=3000,
+                   gd_lr=0.01).fit(x, y)
+        zt = x[::5]
+        np.testing.assert_allclose(r_gd.predict(zt), r_smo.predict(zt),
+                                   atol=0.1)
+
+
+def _interior_doubling_case(x, y, eps, seed):
+    """Property: duplicating strict eps-tube-interior points (zero dual
+    weight at the optimum) must not change the learned function."""
+    reg = SVR(kernel="rbf", epsilon=eps).fit(x, y)
+    resid = np.abs(np.asarray(y, np.float64)
+                   - np.asarray(reg.predict(x), np.float64))
+    interior = resid < 0.7 * eps
+    if not interior.any():
+        return          # nothing to duplicate — property is vacuous
+    x2 = np.concatenate([x, x[interior]], axis=0)
+    y2 = np.concatenate([y, y[interior]])
+    reg2 = SVR(kernel="rbf", gamma=reg.kernel_params.gamma,
+               epsilon=eps).fit(x2, y2)
+    rng = np.random.default_rng(seed)
+    zt = x + rng.normal(scale=0.05, size=x.shape).astype(np.float32)
+    np.testing.assert_allclose(reg2.predict(zt), reg.predict(zt),
+                               atol=2e-2)
+    # the duplicates stay out of the support set
+    dup_beta = np.asarray(reg2.beta_)[x.shape[0]:]
+    assert np.all(np.abs(dup_beta) <= 1e-5)
+
+
+class TestInteriorPointInvariance:
+    def test_doubling_interior_points_seeded(self):
+        for seed in range(4):
+            x, y = make_synth_regression(90, 2, kind="sinc", noise=0.05,
+                                         seed=seed)
+            _interior_doubling_case(x, y, eps=0.2, seed=seed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 10_000),
+           n=st.integers(30, 80),
+           d=st.integers(1, 3),
+           eps=st.floats(0.1, 0.4))
+    @settings(max_examples=12, deadline=None)
+    def test_doubling_interior_points_hypothesis(seed, n, d, eps):
+        x, y = make_synth_regression(n, d, kind="sinc", noise=0.03,
+                                     seed=seed)
+        _interior_doubling_case(x, y, eps=eps, seed=seed)
+
+
+# ------------------------------------------------------------------ sharded
+@pytest.mark.requires_devices(4)
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_svr_matches_unsharded(n_shards):
+    """ISSUE acceptance: sharded (shard="data") SVR produces the
+    identical support set and predictions as the unsharded solve."""
+    x, y = make_synth_regression(200, 3, kind="sinc", noise=0.05, seed=7)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    cfg = smo.SMOConfig()
+    ref = smo.svr_smo(jnp.asarray(x), jnp.asarray(y), epsilon=0.1,
+                      cfg=cfg, kernel=kp)
+    got = smo.sharded_svr_smo(x, y, epsilon=0.1,
+                              mesh=make_shard_mesh(n_shards), cfg=cfg,
+                              kernel=kp)
+    assert bool(got.converged)
+    b_ref, b_got = np.asarray(ref.beta), np.asarray(got.beta)
+    # same support set — modulo multipliers below the duality-gap
+    # resolution (cf. tests/test_sharded_smo.py)
+    borderline = np.maximum(np.abs(b_ref), np.abs(b_got)) < 5e-3
+    assert bool(((np.abs(b_ref) > SV_EPS)
+                 == (np.abs(b_got) > SV_EPS))[~borderline].all())
+    np.testing.assert_allclose(b_got, b_ref, rtol=5e-3, atol=5e-3)
+    assert abs(float(ref.b) - float(got.b)) <= 1e-2
+    rng = np.random.default_rng(0)
+    zt = x[:64] + rng.normal(scale=0.05, size=x[:64].shape).astype(
+        np.float32)
+    np.testing.assert_allclose(_predict(x, got.beta, got.b, zt, kp),
+                               _predict(x, ref.beta, ref.b, zt, kp),
+                               atol=5e-3)
+
+
+@pytest.mark.requires_devices(4)
+def test_sharded_svr_class_non_divisible_n(sample_count=137):
+    # 2 * 137 = 274 ≡ 2 (mod 4): the doubled axis needs padding
+    x, y = make_synth_regression(sample_count, 2, kind="sinc",
+                                 noise=0.05, seed=9)
+    ref = SVR(epsilon=0.15).fit(x, y)
+    sh = SVR(epsilon=0.15, mesh=make_shard_mesh(4),
+             worker_axes=("shards",), shard="data").fit(x, y)
+    assert np.array_equal(ref.support_, sh.support_)
+    np.testing.assert_allclose(sh.predict(x), ref.predict(x), atol=5e-3)

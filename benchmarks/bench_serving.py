@@ -1,0 +1,70 @@
+"""Serving throughput: the batched Predictor vs the per-call engine path.
+
+The pre-PR serving story re-uploaded support vectors, rebuilt a
+``KernelEngine`` and looped serving buckets in Python on EVERY
+``predict`` call. ``serve.Predictor`` keeps the packed SV bank resident
+on device and answers from a warm jit cache of fused decide programs.
+This benchmark measures both on the same warm 5-class RBF model at
+request batch sizes {1, 32, 256} and emits JSON lines:
+
+    {"bench": "serving", "batch": B, "engine": ...,
+     "old_rps": ..., "new_rps": ..., "speedup": ...}
+
+``requests/s`` counts individual rows (a batch of 256 that takes 1 ms
+is 256k requests/s). Run via ``python -m benchmarks.run --only
+serving`` (CI runs the --quick variant as a smoke check).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.svm import SVC
+from repro.data.synth import make_blobs
+
+BATCHES = (1, 32, 256)
+
+
+def _legacy_predict(clf: SVC, xt: np.ndarray) -> np.ndarray:
+    """The pre-predictor serving path: per-call engine rebuild + Python
+    bucket loop + decision aggregation."""
+    df = clf._decision_function_engine(xt)
+    idx = clf.strategy.decide(jnp.asarray(df), clf._taskset, clf.decision)
+    return clf.classes_[np.asarray(idx)]
+
+
+def main(quick: bool = False, engine: str = "chunked") -> None:
+    n_per_class = 40 if quick else 120
+    x, y = make_blobs(n_per_class, 5, 16, sep=2.5, seed=0)
+    clf = SVC(solver="smo", gamma=0.5, engine=engine).fit(x, y)
+    pred = clf.predictor().warmup(batch_sizes=BATCHES)
+
+    rng = np.random.default_rng(1)
+    iters = 3 if quick else 5
+    for batch in BATCHES:
+        xt = x[rng.integers(0, len(x), size=batch)]
+        t_old = common.timeit(lambda: _legacy_predict(clf, xt),
+                              warmup=1, iters=iters)
+        t_new = common.timeit(lambda: pred.predict(xt),
+                              warmup=1, iters=iters)
+        record = {
+            "bench": "serving",
+            "engine": engine,
+            "batch": int(batch),
+            "n_train": int(len(x)),
+            "n_tasks": int(pred.model.n_tasks),
+            "n_support": int(pred.model.n_support),
+            "old_s_per_call": t_old,
+            "new_s_per_call": t_new,
+            "old_rps": batch / t_old,
+            "new_rps": batch / t_new,
+            "speedup": t_old / t_new,
+        }
+        if pred.n_programs >= 0:  # private jax API; absent -> omit
+            record["n_programs"] = int(pred.n_programs)
+        common.emit_json(record)
+
+
+if __name__ == "__main__":
+    main()

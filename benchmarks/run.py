@@ -20,6 +20,10 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
   beyond-paper  -> bench_svr         (epsilon-SVR SMO vs projected-GD
                                       wall time + MSE, JSON lines;
                                       --only svr)
+  beyond-paper  -> bench_serving     (batched Predictor vs per-call
+                                      engine serving, requests/s at
+                                      batch {1, 32, 256}, JSON lines;
+                                      --only serving)
 """
 from __future__ import annotations
 
@@ -34,7 +38,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
                          "kernels; opt-in extras: large_n,scheduler,"
-                         "sharded,svr")
+                         "sharded,svr,serving")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -71,6 +75,10 @@ def main(argv=None) -> None:
         # opt-in: the regression analog of the SMO-vs-GD comparison
         from benchmarks import bench_svr
         bench_svr.main(quick=args.quick)
+    if only is not None and "serving" in only:
+        # opt-in: batched Predictor vs the per-call engine serving path
+        from benchmarks import bench_serving
+        bench_serving.main(quick=args.quick)
 
 
 if __name__ == "__main__":

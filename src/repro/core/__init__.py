@@ -9,4 +9,5 @@ from repro.core.multiclass import (BinaryTask, Bucket,  # noqa: F401
                                    MulticlassStrategy, OneVsOneStrategy,
                                    OneVsRestStrategy, Schedule,
                                    ScheduleConfig, TaskSet, build_schedule,
-                                   get_strategy, schedule_stats)
+                                   decide_from_pairs, get_strategy,
+                                   schedule_stats)

@@ -96,7 +96,12 @@ inside the jitted solver) or a bound engine from ``make_engine``:
 ``SVC`` accepts ``engine="auto"|"dense"|"chunked"|"pallas"`` or a full
 ``EngineConfig``, and after ``fit`` serves predictions from a compacted
 support-vector set (alpha > 0 rows only), so serving cost scales with
-#SV rather than n.
+#SV rather than n. Serving itself routes through ``repro.serve``: the
+predictor's chunked/dense configs run ``engine.decide`` (built inside
+the jitted decide program — every method here is jit/vmap-safe), which
+makes this module the REFERENCE path the fused pallas serving kernel is
+tested against; ``serve.serving_config`` owns the training->serving
+backend degradation (dense/auto -> chunked, cache_slots=0).
 
 Regression rides the same engines: the epsilon-SVR solvers
 (``core.smo.svr_smo`` / ``core.gd.svr_gd`` / ``SVR``) bind their engine

@@ -77,9 +77,14 @@ def make_gram_fn(params: KernelParams) -> Callable[[jax.Array, jax.Array], jax.A
 
 
 def resolve_gamma(params: KernelParams, x: jax.Array) -> KernelParams:
-    """Resolve gamma<=0 to the sklearn-style 'scale' heuristic."""
+    """Resolve gamma<=0 to the sklearn-style 'scale' heuristic.
+
+    Constant / near-constant features get ``gamma = 1.0`` (sklearn's
+    fallback): the old ``max(var, 1e-12)`` clamp produced gamma ~ 1e12,
+    which degenerates the RBF Gram to the identity matrix.
+    """
     if params.gamma > 0:
         return params
     var = float(jnp.var(x))
-    gamma = 1.0 / (x.shape[-1] * max(var, 1e-12))
+    gamma = 1.0 / (x.shape[-1] * var) if var > 1e-12 else 1.0
     return dataclasses.replace(params, gamma=gamma)

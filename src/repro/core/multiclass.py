@@ -132,14 +132,8 @@ class OneVsOneStrategy(MulticlassStrategy):
                        strategy=self.name)
 
     def decide(self, df, taskset, decision="vote"):
-        pairs = taskset.pairs
-        m = len(taskset.classes)
-        if decision == "margin":
-            return margin_decision(df, pairs, m)
-        if decision == "vote":
-            return vote_decision(df, pairs, m)
-        raise ValueError(f"unknown OvO decision {decision!r}; "
-                         "expected 'vote' or 'margin'")
+        return decide_from_pairs(df, taskset.pairs, len(taskset.classes),
+                                 self.name, decision)
 
 
 class OneVsRestStrategy(MulticlassStrategy):
@@ -158,10 +152,8 @@ class OneVsRestStrategy(MulticlassStrategy):
                        strategy=self.name)
 
     def decide(self, df, taskset, decision="vote"):
-        # OvR has one decision value per class (tasks are built in class
-        # order): argmax IS the decision (``decision`` mode is an OvO
-        # concept and is ignored here).
-        return jnp.argmax(jnp.asarray(df), axis=0)
+        return decide_from_pairs(df, taskset.pairs, len(taskset.classes),
+                                 self.name, decision)
 
 
 _STRATEGIES = {"ovo": OneVsOneStrategy, "ovr": OneVsRestStrategy}
@@ -178,6 +170,27 @@ def get_strategy(name: str | MulticlassStrategy) -> MulticlassStrategy:
 
 
 # ------------------------------------------------------------ vote decisions
+def decide_from_pairs(df: jnp.ndarray, pairs: np.ndarray, m: int,
+                      strategy: str, decision: str = "vote") -> jnp.ndarray:
+    """Class indices from stacked decision values + the (C, 2) credit
+    table alone — the TaskSet-free decision shared by the strategies and
+    the serving layer (``repro.serve``), which carries ``pairs`` in the
+    packed artifact instead of the training-side TaskSet.
+
+    OvR has one decision value per class (tasks are built in class
+    order), so argmax IS the decision and ``decision`` is ignored there
+    (it is an OvO concept).
+    """
+    if strategy == "ovr":
+        return jnp.argmax(jnp.asarray(df), axis=0)
+    if decision == "margin":
+        return margin_decision(df, pairs, m)
+    if decision == "vote":
+        return vote_decision(df, pairs, m)
+    raise ValueError(f"unknown OvO decision {decision!r}; "
+                     "expected 'vote' or 'margin'")
+
+
 def vote_decision(df: jnp.ndarray, pairs: np.ndarray, m: int) -> jnp.ndarray:
     """Vectorized majority vote: one pair of (t, C) @ (C, m) matmuls
     instead of a Python loop of C scatter-adds.

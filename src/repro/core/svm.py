@@ -48,10 +48,28 @@ All Gram computation — training AND serving — flows through
 the model keeps only the support vectors (alpha > 0): per serving bucket
 for multiclass, so ``decision_function`` cost scales with #SV, not with
 the training-set size.
+
+Serving routes through ``repro.serve``: ``predict`` /
+``decision_function`` pack the compacted SV bank into an immutable
+``serve.PackedModel`` once and answer every subsequent call through a
+cached ``serve.Predictor`` (device-resident SV bank, one jitted decide
+program per bucket/batch-bucket shape — the pallas backend uses the
+fused multi-task decision kernel). The packed artifact is also the
+export format: ``serve.save(path, serve.pack(clf))``. The pre-predictor
+per-call engine path is kept as ``_decision_function_engine`` /
+``SVR._predict_engine`` — the reference implementation the serve path
+is tested bit-identical against.
+
+Binary decision values follow the sklearn sign convention: ``fit`` maps
+``classes_[1]`` to +1, so a POSITIVE margin predicts ``classes_[1]``
+(before PR 5 the orientation was inverted: ``classes_[0]`` mapped to
++1). The support threshold is RELATIVE to the box: alpha (|beta| for
+SVR) counts as a support vector above ``1e-8 * C``, so small-C models
+keep their support set instead of collapsing to a constant-bias
+predictor.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import lru_cache
 from typing import NamedTuple, Optional
 
@@ -63,8 +81,16 @@ from jax.sharding import Mesh
 from repro.core import dist, gd, kernel_engine as KE, kernels as K
 from repro.core import multiclass as MC
 from repro.core import smo
+from repro import serve
 
+# Support threshold, RELATIVE to the box constraint: alpha > _SV_EPS * C
+# counts as a support vector. An absolute cutoff drops EVERY SV once
+# C < eps (all alpha <= C), collapsing the model to its constant bias.
 _SV_EPS = 1e-8
+
+
+def _sv_threshold(C: float) -> float:
+    return _SV_EPS * float(C)
 
 
 @lru_cache(maxsize=64)
@@ -87,11 +113,21 @@ def _jitted_svr_fit(solver: str, epsilon: float, cfg, kernel, ecfg):
                                      kernel=kernel, engine=ecfg))
 
 
-def _serving_cfg(engine_cfg: KE.EngineConfig) -> KE.EngineConfig:
-    """Serving never needs the (sv, sv) training Gram, so dense/auto
-    degrade to chunked; an explicit pallas choice is honored."""
-    backend = ("pallas" if engine_cfg.backend == "pallas" else "chunked")
-    return dataclasses.replace(engine_cfg, backend=backend, cache_slots=0)
+# serving-side engine resolution lives with the serving subsystem now
+_serving_cfg = serve.serving_config
+
+
+def _cached_predictor(model) -> "serve.Predictor":
+    """Shared SVC/SVR predictor cache: one ``serve.Predictor`` per
+    serving engine config, packed lazily; ``fit`` resets the cache so a
+    refit repacks."""
+    assert model._fitted
+    scfg = _serving_cfg(model.engine_cfg)
+    pred = model._predictors.get(scfg)
+    if pred is None:
+        pred = serve.Predictor(serve.pack(model), engine=scfg)
+        model._predictors[scfg] = pred
+    return pred
 
 
 class _ServingBucket(NamedTuple):
@@ -118,8 +154,13 @@ class SVC:
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",),
                  shard: str = "task"):
-        self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
-                                            degree=degree, coef0=coef0)
+        # the constructor's params keep the gamma<=0 "scale" sentinel;
+        # fit() re-resolves from THEM each call, so a refit on new data
+        # recomputes gamma (sklearn semantics) instead of reusing the
+        # value resolved from the first fit's data
+        self._kernel_cfg = K.KernelParams(name=kernel, gamma=gamma,
+                                          degree=degree, coef0=coef0)
+        self.kernel_params = self._kernel_cfg
         self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter,
                                      shrink_every=shrink_every)
         self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
@@ -153,10 +194,16 @@ class SVC:
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVC":
         x = np.asarray(x, np.float32)
         y = np.asarray(y)
-        self.kernel_params = K.resolve_gamma(self.kernel_params,
+        self.kernel_params = K.resolve_gamma(self._kernel_cfg,
                                              jnp.asarray(x))
         classes = np.unique(y)
+        if len(classes) < 2:
+            raise ValueError(
+                f"SVC.fit needs >= 2 classes in y, got {len(classes)} "
+                f"({classes.tolist()}); a single-class problem has no "
+                f"decision boundary to learn")
         self.classes_ = classes
+        self._predictors: dict = {}
         if len(classes) == 2:
             self._fit_binary(x, y, classes)
         else:
@@ -184,7 +231,9 @@ class SVC:
                 and n_workers > 1 and n >= dist.DATA_PARALLEL_MIN_WIDTH)
 
     def _fit_binary(self, x, y, classes) -> None:
-        yy = np.where(y == classes[0], 1.0, -1.0).astype(np.float32)
+        # sklearn orientation: classes_[1] maps to +1, so a positive
+        # decision margin predicts classes_[1]
+        yy = np.where(y == classes[1], 1.0, -1.0).astype(np.float32)
         ecfg = self.engine_cfg
         if self._use_data_parallel_binary(x.shape[0]):
             r = smo.sharded_binary_smo(
@@ -208,7 +257,7 @@ class SVC:
         self._binary = True
         self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
         # serving state: compacted support-vector set only
-        sv = self.alpha_ > _SV_EPS
+        sv = self.alpha_ > _sv_threshold(self.smo_cfg.C)
         self.support_ = np.where(sv)[0]
         self.n_support_ = int(sv.sum())
         self.support_vectors_ = x[sv]
@@ -246,7 +295,8 @@ class SVC:
         sv_counts = np.zeros(taskset.n_tasks, np.int64)
         sv_idx = []
         for t, task in enumerate(taskset.tasks):
-            idx = np.flatnonzero(fit.alpha[t, :task.size] > _SV_EPS)
+            idx = np.flatnonzero(fit.alpha[t, :task.size]
+                                 > _sv_threshold(self.smo_cfg.C))
             sv_idx.append(idx)
             sv_counts[t] = len(idx)
         self.n_support_ = sv_counts
@@ -275,7 +325,23 @@ class SVC:
         self._serving_buckets = groups
 
     # ------------------------------------------------------------- predict
+    def predictor(self) -> "serve.Predictor":
+        """The cached batched serving engine for this fit (one per
+        serving engine config — the SV bank stays resident on device and
+        decide programs jit-cache across calls). Repacked on refit."""
+        return _cached_predictor(self)
+
     def decision_function(self, xt: np.ndarray) -> np.ndarray:
+        """(n_test,) margins for binary (positive => ``classes_[1]``,
+        the sklearn orientation), (n_tasks, n_test) stacked binary
+        decisions for multiclass (OvO: m(m-1)/2 rows, OvR: m rows)."""
+        return self.predictor().decision_function(xt)
+
+    def _decision_function_engine(self, xt: np.ndarray) -> np.ndarray:
+        """Pre-predictor reference path: rebuilds a ``KernelEngine`` and
+        loops serving buckets in Python on every call. Kept as the
+        fallback the serve path is tested bit-identical against (and as
+        the baseline ``benchmarks/bench_serving.py`` measures)."""
         assert self._fitted
         xt = jnp.asarray(np.asarray(xt, np.float32))
         if self._binary:
@@ -300,12 +366,7 @@ class SVC:
         return df
 
     def predict(self, xt: np.ndarray) -> np.ndarray:
-        df = self.decision_function(xt)
-        if self._binary:
-            return np.where(df > 0, self.classes_[0], self.classes_[1])
-        idx = self.strategy.decide(jnp.asarray(df), self._taskset,
-                                   self.decision)
-        return self.classes_[np.asarray(idx)]
+        return self.predictor().predict(xt)
 
     def score(self, xt: np.ndarray, yt: np.ndarray) -> float:
         return float(np.mean(self.predict(xt) == np.asarray(yt)))
@@ -327,8 +388,10 @@ class SVR:
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",),
                  shard: str = "task"):
-        self.kernel_params = K.KernelParams(name=kernel, gamma=gamma,
-                                            degree=degree, coef0=coef0)
+        # gamma "scale" sentinel kept; re-resolved per fit (see SVC)
+        self._kernel_cfg = K.KernelParams(name=kernel, gamma=gamma,
+                                          degree=degree, coef0=coef0)
+        self.kernel_params = self._kernel_cfg
         self.smo_cfg = smo.SMOConfig(C=C, tol=tol, max_iter=max_iter,
                                      shrink_every=shrink_every)
         self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
@@ -363,7 +426,7 @@ class SVR:
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVR":
         x = np.asarray(x, np.float32)
         y = np.asarray(y, np.float32)
-        self.kernel_params = K.resolve_gamma(self.kernel_params,
+        self.kernel_params = K.resolve_gamma(self._kernel_cfg,
                                              jnp.asarray(x))
         eps, ecfg = self.epsilon, self.engine_cfg
         if self._use_data_parallel(x.shape[0]):
@@ -390,16 +453,27 @@ class SVR:
         self.b_ = float(r.b)
         self.alpha_raw_ = np.asarray(r.alpha)   # (2n,) [alpha; alpha*]
         # serving state: compacted support-vector set only
-        sv = np.abs(self.beta_) > _SV_EPS
+        sv = np.abs(self.beta_) > _sv_threshold(self.smo_cfg.C)
         self.support_ = np.where(sv)[0]
         self.n_support_ = int(sv.sum())
         self.support_vectors_ = x[sv]
         self.dual_coef_ = self.beta_[sv].astype(np.float32)
+        self._predictors: dict = {}
         self._fitted = True
         return self
 
     # ------------------------------------------------------------- predict
+    def predictor(self) -> "serve.Predictor":
+        """The cached batched serving engine for this fit (see
+        ``SVC.predictor``)."""
+        return _cached_predictor(self)
+
     def predict(self, xt: np.ndarray) -> np.ndarray:
+        return self.predictor().predict(xt)
+
+    def _predict_engine(self, xt: np.ndarray) -> np.ndarray:
+        """Pre-predictor reference path (see
+        ``SVC._decision_function_engine``)."""
         assert self._fitted
         xt = jnp.asarray(np.asarray(xt, np.float32))
         if self.n_support_ == 0:   # every sample inside the tube

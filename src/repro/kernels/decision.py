@@ -1,4 +1,4 @@
-"""Batched SVM decision-function Pallas kernel (inference hot spot).
+"""Batched SVM decision-function Pallas kernels (inference hot spot).
 
 f(z) = sum_i coef_i K(x_i, z) + b  for a batch of test rows z, fusing the
 RBF Gram block with the contraction against coef = alpha*y so the (nt, n)
@@ -10,6 +10,14 @@ kernel matrix never materializes in HBM:
   column. The train axis (reduction) is the innermost sequential grid
   dimension; features stay resident per-tile (SVM d is small — 4..102 —
   so one d-chunk suffices; ops.py pads d to the 128 lane width).
+
+``multitask_decision_pallas`` is the serving-side generalization: a
+stacked bank of T binary tasks (T, w, d) — one serving bucket of the
+packed model artifact — evaluated against ONE test batch in a single
+grid (T, nt/bt, w/bn). The task axis is the outermost grid dimension, so
+per task the (i, k) iteration order — and therefore the f32 accumulation
+order — is exactly the single-task kernel's, and the test tile is reused
+across all T tasks instead of re-streaming per task.
 """
 from __future__ import annotations
 
@@ -67,3 +75,58 @@ def decision_pallas(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
         interpret=interpret,
     )(x_test, x_train, coef.reshape(1, n))
     return out[:, 0]
+
+
+def _multitask_kernel(xt_ref, sv_ref, coef_ref, out_ref, *,
+                      gamma: float, mode: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xt = xt_ref[...].astype(jnp.float32)          # (bt, d)
+    sv = sv_ref[...][0].astype(jnp.float32)       # (bn, d) task-t SV tile
+    coef = coef_ref[...].astype(jnp.float32)      # (1, bn)
+
+    dot = jax.lax.dot_general(xt, sv, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if mode == "rbf":
+        t2 = jnp.sum(xt * xt, axis=1, keepdims=True)       # (bt, 1)
+        r2 = jnp.sum(sv * sv, axis=1, keepdims=True).T     # (1, bn)
+        kblock = jnp.exp(-gamma * jnp.maximum(t2 + r2 - 2.0 * dot, 0.0))
+    else:                                         # linear
+        kblock = dot
+    out_ref[...] += jnp.sum(kblock * coef, axis=1, keepdims=True).T
+
+
+def multitask_decision_pallas(x_test: jax.Array, sv_x: jax.Array,
+                              coef: jax.Array, *, gamma: float,
+                              mode: str = "rbf", block_t: int = 128,
+                              block_n: int = 128,
+                              interpret: bool = True) -> jax.Array:
+    """(T, nt) stacked decision values WITHOUT bias (add b outside).
+
+    ``sv_x`` is a (T, w, d) serving bucket: T binary tasks padded to a
+    common SV width w. Shapes must be pre-padded: nt % block_t == 0,
+    w % block_n == 0; padded SV rows must carry coef == 0 (zero-padded
+    test rows are sliced off by the caller).
+    """
+    nt, d = x_test.shape
+    n_tasks, w, d2 = sv_x.shape
+    assert d == d2 and nt % block_t == 0 and w % block_n == 0
+    assert coef.shape == (n_tasks, w)
+    grid = (n_tasks, nt // block_t, w // block_n)
+    kernel = functools.partial(_multitask_kernel, gamma=gamma, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda t, i, k: (i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda t, i, k: (t, k, 0)),
+            pl.BlockSpec((1, block_n), lambda t, i, k: (t, k)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda t, i, k: (t, i)),
+        out_shape=jax.ShapeDtypeStruct((n_tasks, nt), jnp.float32),
+        interpret=interpret,
+    )(x_test, sv_x, coef)

@@ -98,6 +98,40 @@ def decision(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
     return out[:nt] + b
 
 
+@partial(jax.jit, static_argnames=("gamma", "mode", "block_t", "block_n",
+                                   "interpret"))
+def multitask_decision(x_test: jax.Array, sv_x: jax.Array, coef: jax.Array,
+                       b: jax.Array | None = None, *, gamma: float = 1.0,
+                       mode: str = "rbf", block_t: int = 128,
+                       block_n: int = 128,
+                       interpret: bool | None = None) -> jax.Array:
+    """f_t(z) = K(z, SV_t) @ coef_t + b_t for a stacked (T, w, d) SV bank.
+
+    One fused grid over every task of a serving bucket (the batched
+    inference hot spot); padded SV rows carry coef = 0 and padded test
+    rows are sliced off, exactly like ``decision``. A width-0 bank (the
+    empty-SV degenerate model) short-circuits to the broadcast bias.
+    """
+    if mode not in ("rbf", "linear"):
+        raise ValueError(f"unknown multitask decision mode {mode!r}; "
+                         "expected 'rbf' or 'linear'")
+    if interpret is None:
+        interpret = _auto_interpret()
+    nt = x_test.shape[0]
+    n_tasks, w, _ = sv_x.shape
+    if w == 0:  # no support vectors anywhere: constant-bias predictor
+        out = jnp.zeros((n_tasks, nt), jnp.float32)
+        return out if b is None else out + b[:, None].astype(jnp.float32)
+    d_mult = 128
+    xt = _pad_to(_pad_to(x_test.astype(jnp.float32), 1, d_mult), 0, block_t)
+    sv = _pad_to(_pad_to(sv_x.astype(jnp.float32), 2, d_mult), 1, block_n)
+    cf = _pad_to(coef.astype(jnp.float32), 1, block_n)
+    out = _decision.multitask_decision_pallas(
+        xt, sv, cf, gamma=gamma, mode=mode, block_t=block_t,
+        block_n=block_n, interpret=interpret)[:, :nt]
+    return out if b is None else out + b[:, None].astype(jnp.float32)
+
+
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                    "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

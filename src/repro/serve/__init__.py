@@ -1,0 +1,16 @@
+"""Serving subsystem: packed model artifacts + the batched Predictor.
+
+    from repro import serve
+
+    packed = serve.pack(clf)              # fitted SVC / SVR -> artifact
+    serve.save("model.npz", packed)       # versioned npz schema
+    pred = serve.Predictor(serve.load("model.npz"), engine="pallas")
+    pred.predict(Z)                       # jit-cached batched serving
+
+See ``serve.artifact`` for the artifact schema and ``serve.predictor``
+for the bucket/jit-cache behavior.
+"""
+from repro.serve.artifact import (PackedModel, TaskBucket,  # noqa: F401
+                                  SCHEMA_NAME, SCHEMA_VERSION, load, pack,
+                                  save)
+from repro.serve.predictor import Predictor, serving_config  # noqa: F401

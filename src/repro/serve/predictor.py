@@ -1,0 +1,157 @@
+"""Batched serving engine: resident SV banks + jit-cached decide programs.
+
+The training-side ``decision_function`` rebuilds a ``KernelEngine`` and
+re-uploads the support vectors on EVERY call, then loops serving buckets
+in Python — fine for evaluating a fit, hopeless under request traffic.
+``Predictor`` is the serving-side replacement:
+
+* the packed SV bank (``artifact.PackedModel``) is moved to device once,
+  at construction, and stays resident;
+* decisions run through ONE jitted program per (bucket shape,
+  batch bucket) static configuration — for the pallas backend the fused
+  multi-task kernel (``kernels.ops.multitask_decision``), which
+  evaluates every stacked task of a bucket against the test batch in a
+  single grid; for chunked/dense configs a vmapped ``engine.decide``
+  (the reference/fallback path, numerically identical to the legacy
+  training-side serving);
+* request batches are padding-bucketed: each micro-batch is zero-padded
+  up to the next power of two (capped at ``max_batch``; longer requests
+  stream in ``max_batch`` slices), so arbitrary request sizes reuse a
+  small warm set of compiled programs instead of recompiling per shape.
+
+Padded test rows are sliced off before results leave the predictor, and
+padded SV rows carry ``coef == 0``, so padding never changes a served
+value. Width-0 banks (the empty-SV degenerate model) serve the constant
+bias, matching the training-side behavior.
+
+    pred = Predictor(serve.pack(clf), engine="pallas")
+    pred.predict(Z)                   # class labels / SVR values
+    pred.decision_function(Z)         # margins, sklearn orientation
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_engine as KE
+from repro.core import multiclass as MC
+from repro.kernels import ops
+from repro.serve.artifact import PackedModel
+
+
+def serving_config(engine: str | KE.EngineConfig) -> KE.EngineConfig:
+    """Resolve an engine choice into the serving-side config: serving
+    never needs the (sv, sv) training Gram nor the LRU row cache, so
+    dense/auto/sharded degrade to chunked; an explicit pallas choice is
+    honored."""
+    cfg = (engine if isinstance(engine, KE.EngineConfig)
+           else KE.EngineConfig(backend=engine))
+    backend = "pallas" if cfg.backend == "pallas" else "chunked"
+    return dataclasses.replace(cfg, backend=backend, cache_slots=0)
+
+
+class Predictor:
+    """Serve a ``PackedModel``; see module docstring."""
+
+    def __init__(self, model: PackedModel, *,
+                 engine: str | KE.EngineConfig = "auto",
+                 max_batch: int = 1024):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.model = model
+        self.max_batch = int(max_batch)
+        self.engine_cfg = serving_config(engine)
+        # SV banks move to device once and stay resident; task_ids stay
+        # host-side (they only scatter results back into request order)
+        self._banks = tuple(
+            (jnp.asarray(g.sv_x), jnp.asarray(g.sv_coef),
+             jnp.asarray(g.b), np.asarray(g.task_ids))
+            for g in model.buckets)
+        # one jitted callable; XLA caches one executable per distinct
+        # (bucket shape, batch bucket) argument signature
+        self._decide = jax.jit(self._decide_stack)
+        self.n_requests = 0  # rows served (warmup excluded)
+
+    # ---------------------------------------------------------- programs
+    def _decide_stack(self, sv_x, sv_coef, b, z):
+        """(T, w, d) stacked bank x (B, d) batch -> (T, B) decisions."""
+        kp = self.model.kernel
+        if self.engine_cfg.backend == "pallas" and kp.name == "rbf":
+            return ops.multitask_decision(z, sv_x, sv_coef, b,
+                                          gamma=kp.gamma, mode="rbf")
+
+        def one(sv, cf, bb):
+            return KE.make_engine(sv, kp, self.engine_cfg).decide(z, cf, bb)
+
+        return jax.vmap(one)(sv_x, sv_coef, b)
+
+    @property
+    def n_programs(self) -> int:
+        """Compiled decide-program count (the jit cache size)."""
+        try:
+            return int(self._decide._cache_size())
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1
+
+    def _batch_bucket(self, t: int) -> int:
+        return min(self.max_batch, 1 << (max(t, 1) - 1).bit_length())
+
+    def warmup(self, batch_sizes=(1,)) -> "Predictor":
+        """Pre-compile the decide programs for the given request sizes.
+
+        Warmup rows are synthetic and do NOT count toward
+        ``n_requests`` (the served-row counter)."""
+        d = self.model.n_features
+        served = self.n_requests
+        for t in batch_sizes:
+            self.decision_values(np.zeros((int(t), d), np.float32))
+        self.n_requests = served
+        return self
+
+    # ------------------------------------------------------------ serving
+    def decision_values(self, xt: np.ndarray) -> np.ndarray:
+        """(n_tasks, nt) stacked binary decision values."""
+        xt = np.asarray(xt, np.float32)
+        if xt.ndim != 2 or xt.shape[1] != self.model.n_features:
+            raise ValueError(
+                f"expected (n, {self.model.n_features}) request batch, "
+                f"got shape {xt.shape}")
+        nt = xt.shape[0]
+        out = np.empty((self.model.n_tasks, nt), np.float32)
+        for start in range(0, nt, self.max_batch):
+            stop = min(start + self.max_batch, nt)
+            bucket = self._batch_bucket(stop - start)
+            zp = np.zeros((bucket, xt.shape[1]), np.float32)
+            zp[:stop - start] = xt[start:stop]
+            zj = jnp.asarray(zp)
+            for sv_x, sv_coef, b, task_ids in self._banks:
+                if sv_x.shape[1] == 0:  # empty-SV bank: constant bias
+                    out[task_ids, start:stop] = np.asarray(b)[:, None]
+                    continue
+                df = self._decide(sv_x, sv_coef, b, zj)
+                out[task_ids, start:stop] = np.asarray(
+                    df)[:, :stop - start]
+        self.n_requests += nt
+        return out
+
+    def decision_function(self, xt: np.ndarray) -> np.ndarray:
+        """Margins in the training-side convention: (nt,) for binary
+        SVC and SVR (positive margin => ``classes[1]``), (n_tasks, nt)
+        stacked for multiclass."""
+        df = self.decision_values(xt)
+        return df[0] if self.model.strategy in ("binary", "svr") else df
+
+    def predict(self, xt: np.ndarray) -> np.ndarray:
+        """Class labels (SVC) or regression values (SVR)."""
+        df = self.decision_values(xt)
+        m = self.model
+        if m.kind == "svr":
+            return df[0]
+        if m.strategy == "binary":
+            return m.classes[(df[0] > 0).astype(np.int64)]
+        idx = MC.decide_from_pairs(jnp.asarray(df), m.pairs, m.n_classes,
+                                   m.strategy, m.decision)
+        return m.classes[np.asarray(idx)]

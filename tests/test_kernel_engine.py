@@ -259,8 +259,9 @@ class TestCompactedServing:
         assert clf.n_support_ == len(clf.support_)
         assert clf.support_vectors_.shape == (clf.n_support_, x.shape[1])
         assert 0 < clf.n_support_ < sel.sum()  # actually compacted
-        # compacted decision == full-training-set decision
-        yy = np.where(y[sel] == 0, 1.0, -1.0).astype(np.float32)
+        # compacted decision == full-training-set decision (sklearn
+        # orientation: classes_[1] == class 1 encodes as +1)
+        yy = np.where(y[sel] == 1, 1.0, -1.0).astype(np.float32)
         full = smo.decision_function(
             jnp.asarray(x[sel]), jnp.asarray(yy),
             jnp.asarray(clf.alpha_), clf.b_, jnp.asarray(x[sel]),

@@ -79,6 +79,52 @@ def test_decision_sweep(nt, n, d):
                                rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.parametrize("n_tasks,w,nt,d", [
+    (1, 40, 50, 7), (3, 11, 37, 4), (4, 128, 128, 32), (2, 200, 1, 102),
+])
+@pytest.mark.parametrize("mode", ["rbf", "linear"])
+def test_multitask_decision_sweep(n_tasks, w, nt, d, mode):
+    xt = RNG.normal(size=(nt, d)).astype(np.float32)
+    sv = RNG.normal(size=(n_tasks, w, d)).astype(np.float32)
+    coef = RNG.normal(size=(n_tasks, w)).astype(np.float32)
+    b = RNG.normal(size=(n_tasks,)).astype(np.float32)
+    got = ops.multitask_decision(jnp.asarray(xt), jnp.asarray(sv),
+                                 jnp.asarray(coef), jnp.asarray(b),
+                                 gamma=0.21, mode=mode)
+    want = np.stack([
+        np.asarray(ref.rbf_gram(jnp.asarray(xt), jnp.asarray(sv[t]), 0.21)
+                   if mode == "rbf" else xt @ sv[t].T) @ coef[t] + b[t]
+        for t in range(n_tasks)])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                               atol=2e-5)
+    assert got.shape == (n_tasks, nt)
+
+
+def test_multitask_decision_matches_per_task_kernel():
+    # the fused grid must be BIT-identical to the single-task decision
+    # kernel per stacked row (same block sizes, same (i, k) order)
+    xt = RNG.normal(size=(37, 6)).astype(np.float32)
+    sv = RNG.normal(size=(3, 50, 6)).astype(np.float32)
+    coef = RNG.normal(size=(3, 50)).astype(np.float32)
+    b = RNG.normal(size=(3,)).astype(np.float32)
+    got = np.asarray(ops.multitask_decision(
+        jnp.asarray(xt), jnp.asarray(sv), jnp.asarray(coef),
+        jnp.asarray(b), gamma=0.37))
+    want = np.stack([
+        np.asarray(ops.decision(jnp.asarray(xt), jnp.asarray(sv[t]),
+                                jnp.asarray(coef[t]), b[t], gamma=0.37))
+        for t in range(3)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multitask_decision_rejects_unknown_mode():
+    z = jnp.zeros((4, 3), jnp.float32)
+    sv = jnp.zeros((1, 8, 3), jnp.float32)
+    cf = jnp.zeros((1, 8), jnp.float32)
+    with pytest.raises(ValueError, match="mode"):
+        ops.multitask_decision(z, sv, cf, gamma=1.0, mode="poly")
+
+
 def test_gram_row_fn_matches_full():
     x = RNG.normal(size=(300, 32)).astype(np.float32)
     row = ops.gram_row_fn(gamma=0.5)(jnp.asarray(x), jnp.asarray(x[7]))

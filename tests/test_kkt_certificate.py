@@ -32,7 +32,8 @@ ENGINES = [
 def _svc_violation(clf: SVC, x, y) -> float:
     """Recompute f for the classification spec (p = -1, box [0, C]) and
     certify the stored alpha."""
-    yy = np.where(y == clf.classes_[0], 1.0, -1.0).astype(np.float32)
+    # sklearn orientation (PR 5): fit encodes classes_[1] as +1
+    yy = np.where(y == clf.classes_[1], 1.0, -1.0).astype(np.float32)
     g = np.asarray(K.make_gram_fn(clf.kernel_params)(
         jnp.asarray(x), jnp.asarray(x)), np.float64)
     alpha = np.asarray(clf.alpha_, np.float64)

@@ -1,0 +1,291 @@
+"""Serving-path equivalence: ``serve.Predictor`` vs the legacy engine path.
+
+The contract PR 5 pins down: predictions served through the packed
+artifact + Predictor are BIT-IDENTICAL to the pre-predictor
+engine-backed path (``SVC._decision_function_engine`` /
+``SVR._predict_engine``) across engines x model kinds, including
+empty-SV degenerate models and non-bucket-aligned batch sizes.
+
+Decision VALUES are bit-identical everywhere except one documented
+case: multi-task (T >= 2) serving buckets on the chunked backend with a
+non-bucket-aligned batch, where XLA's batched matmul reassociates the
+f32 accumulation once the batch is zero-padded to its bucket — there
+the values are bounded at a few ulp and the predicted labels still
+match exactly. T = 1 banks (binary SVC, SVR) and the pallas fused
+kernel (fixed 128-row blocks in both paths) are bit-identical at every
+batch size.
+"""
+import io
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.core import kernels as K
+from repro.core.svm import SVC, SVR
+from repro.data.synth import make_blobs, make_imbalanced_blobs, \
+    make_synth_regression
+
+ENGINES = ["dense", "chunked", "pallas"]
+
+
+def _aligned(n: int) -> bool:
+    return n == 1 << (n - 1).bit_length()
+
+
+@pytest.fixture(scope="module")
+def binary_problem():
+    x, y = make_blobs(30, 2, 4, sep=3.0, seed=0)
+    return x, y, SVC(solver="smo", gamma=0.5).fit(x, y)
+
+
+@pytest.fixture(scope="module")
+def ovo_problem():
+    x, y = make_imbalanced_blobs([40, 25, 12, 9, 6], 4, sep=4.0, seed=1)
+    return x, y, SVC(solver="smo", gamma=0.5).fit(x, y)
+
+
+@pytest.fixture(scope="module")
+def ovr_problem():
+    x, y = make_blobs(20, 3, 4, sep=4.0, seed=2)
+    return x, y, SVC(solver="smo", strategy="ovr", gamma=0.5).fit(x, y)
+
+
+@pytest.fixture(scope="module")
+def svr_problem():
+    x, y = make_synth_regression(70, 5, seed=3)
+    return x, y, SVR(solver="smo", gamma=0.5, epsilon=0.05).fit(x, y)
+
+
+def _legacy_predict(model, xt):
+    """Predictions recomputed from the legacy engine path (predict()
+    itself routes through the predictor now)."""
+    if isinstance(model, SVR):
+        return model._predict_engine(xt)
+    df = model._decision_function_engine(xt)
+    if model._binary:
+        return np.where(df > 0, model.classes_[1], model.classes_[0])
+    idx = model.strategy.decide(df, model._taskset, model.decision)
+    return model.classes_[np.asarray(idx)]
+
+
+def _reconfigure(model, engine):
+    import dataclasses
+    model.engine_cfg = dataclasses.replace(model.engine_cfg,
+                                           backend=engine)
+    return model
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("prob", ["binary_problem", "ovo_problem",
+                                  "ovr_problem", "svr_problem"])
+@pytest.mark.parametrize("nt", [1, 7, 32, 37])
+def test_serve_matches_legacy_engine_path(engine, prob, nt, request):
+    x, y, model = request.getfixturevalue(prob)
+    model = _reconfigure(model, engine)
+    xt = x[:nt]
+    if isinstance(model, SVR):
+        got = model.predictor().predict(xt)
+        want = model._predict_engine(xt)
+        np.testing.assert_array_equal(got, want)  # T=1: bitwise, any nt
+        return
+    got_df = model.decision_function(xt)
+    want_df = model._decision_function_engine(xt)
+    serving_backend = model.predictor().engine_cfg.backend
+    multi_task = (not model._binary
+                  and any(len(g.task_ids) > 1
+                          for g in model._serving_buckets))
+    if serving_backend == "pallas" or not multi_task or _aligned(nt):
+        np.testing.assert_array_equal(got_df, want_df)
+    else:
+        # chunked multi-task bucket + padded batch: XLA batched-matmul
+        # reassociation, bounded at a few ulp (module docstring)
+        np.testing.assert_array_almost_equal_nulp(got_df, want_df,
+                                                  nulp=4)
+    np.testing.assert_array_equal(model.predict(xt),
+                                  _legacy_predict(model, xt))
+
+
+@pytest.mark.parametrize("prob", ["binary_problem", "ovo_problem",
+                                  "svr_problem"])
+def test_micro_batch_slicing_matches_single_shot(prob, request):
+    """max_batch streaming (many padded slices) serves the same values
+    as one big batch through the default predictor."""
+    x, y, model = request.getfixturevalue(prob)
+    model = _reconfigure(model, "chunked")
+    sliced = serve.Predictor(serve.pack(model), engine="chunked",
+                             max_batch=8)
+    whole = serve.Predictor(serve.pack(model), engine="chunked")
+    xt = x[:30]
+    np.testing.assert_array_equal(sliced.predict(xt), whole.predict(xt))
+    np.testing.assert_array_almost_equal_nulp(
+        sliced.decision_values(xt), whole.decision_values(xt), nulp=4)
+
+
+# ------------------------------------------------------------- artifacts
+def test_artifact_roundtrip_multiclass(ovo_problem, tmp_path):
+    x, y, model = ovo_problem
+    packed = serve.pack(model)
+    path = tmp_path / "model.npz"
+    serve.save(path, packed)
+    loaded = serve.load(path)
+    assert loaded.kind == "svc" and loaded.strategy == "ovo"
+    assert loaded.n_tasks == packed.n_tasks
+    assert loaded.kernel == packed.kernel
+    np.testing.assert_array_equal(loaded.classes, packed.classes)
+    np.testing.assert_array_equal(loaded.pairs, packed.pairs)
+    assert len(loaded.buckets) == len(packed.buckets)
+    for got, want in zip(loaded.buckets, packed.buckets):
+        for f in got._fields:
+            np.testing.assert_array_equal(getattr(got, f),
+                                          getattr(want, f))
+    pred = serve.Predictor(loaded, engine="chunked")
+    np.testing.assert_array_equal(pred.predict(x[:32]),
+                                  model.predict(x[:32]))
+
+
+def test_artifact_roundtrip_string_labels(tmp_path):
+    x, y_int = make_blobs(15, 2, 3, sep=3.0, seed=4)
+    y = np.where(y_int == 0, "neg", "pos")
+    clf = SVC(solver="smo", gamma=0.5).fit(x, y)
+    path = tmp_path / "m.npz"
+    serve.save(path, serve.pack(clf))
+    pred = serve.Predictor(serve.load(path))
+    got = pred.predict(x[:9])
+    assert set(np.unique(got)) <= {"neg", "pos"}
+    np.testing.assert_array_equal(got, clf.predict(x[:9]))
+
+
+def test_save_load_roundtrip_without_npz_extension(binary_problem,
+                                                   tmp_path):
+    """save() must write the path VERBATIM (bare np.savez appends
+    '.npz' to extension-less paths, breaking load(path))."""
+    _, _, model = binary_problem
+    path = tmp_path / "model-artifact"      # no extension
+    serve.save(path, serve.pack(model))
+    assert path.exists()
+    assert serve.load(path).n_tasks == 1
+
+
+def test_n_requests_counts_served_rows_not_warmup(binary_problem):
+    x, _, model = binary_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    pred.warmup(batch_sizes=(1, 32))
+    assert pred.n_requests == 0             # synthetic rows excluded
+    pred.predict(x[:13])
+    pred.decision_values(x[:7])
+    assert pred.n_requests == 20
+
+
+def test_artifact_rejects_unknown_schema_and_version(binary_problem,
+                                                     tmp_path):
+    _, _, model = binary_problem
+    packed = serve.pack(model)
+    buf = io.BytesIO()
+    serve.save(buf, packed)
+    buf.seek(0)
+    ok = serve.load(buf)
+    assert ok.n_tasks == 1
+
+    import json
+    path = tmp_path / "bad.npz"
+    with np.load(io.BytesIO(buf.getvalue())) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(str(arrays["meta"]))
+    meta["version"] = 999
+    arrays["meta"] = np.array(json.dumps(meta))
+    np.savez(path, **arrays)
+    with pytest.raises(ValueError, match="version"):
+        serve.load(path)
+
+    meta["schema"] = "other.format"
+    arrays["meta"] = np.array(json.dumps(meta))
+    np.savez(path, **arrays)
+    with pytest.raises(ValueError, match="schema"):
+        serve.load(path)
+
+
+def test_pack_requires_fitted_model():
+    with pytest.raises(ValueError, match="fitted"):
+        serve.pack(SVC())
+
+
+def test_packed_model_validates_task_cover(binary_problem):
+    _, _, model = binary_problem
+    packed = serve.pack(model)
+    with pytest.raises(ValueError, match="task ids"):
+        serve.PackedModel(
+            kind="svc", kernel=packed.kernel, n_features=4, n_tasks=2,
+            buckets=packed.buckets, classes=packed.classes,
+            pairs=packed.pairs)
+
+
+# ----------------------------------------------------------- degenerates
+def test_empty_sv_svr_serves_constant_bias():
+    x, y = make_synth_regression(40, 4, noise=0.0, seed=5)
+    reg = SVR(epsilon=50.0).fit(x, y)   # tube swallows every sample
+    assert reg.n_support_ == 0
+    got = reg.predict(x[:11])
+    want = reg._predict_engine(x[:11])
+    np.testing.assert_array_equal(got, want)
+    assert np.all(got == got[0])        # the constant-bias predictor
+    # and it survives the artifact roundtrip
+    buf = io.BytesIO()
+    serve.save(buf, serve.pack(reg))
+    buf.seek(0)
+    pred = serve.Predictor(serve.load(buf))
+    np.testing.assert_array_equal(pred.predict(x[:11]), want)
+
+
+@pytest.mark.parametrize("engine", ["chunked", "pallas"])
+def test_empty_sv_bank_serves_bias_on_every_backend(engine):
+    bank = serve.TaskBucket(task_ids=np.array([0]),
+                            sv_x=np.zeros((1, 0, 3), np.float32),
+                            sv_coef=np.zeros((1, 0), np.float32),
+                            b=np.array([-0.75], np.float32),
+                            sv_counts=np.array([0]))
+    packed = serve.PackedModel(
+        kind="svc", kernel=K.KernelParams(name="rbf", gamma=1.0),
+        n_features=3, n_tasks=1, buckets=(bank,),
+        classes=np.array([0, 1]), pairs=np.array([[1, 0]]))
+    pred = serve.Predictor(packed, engine=engine)
+    df = pred.decision_function(np.ones((5, 3), np.float32))
+    np.testing.assert_array_equal(df, np.full(5, -0.75, np.float32))
+    np.testing.assert_array_equal(
+        pred.predict(np.ones((5, 3), np.float32)), np.zeros(5))
+
+
+# ------------------------------------------------------------- jit cache
+def test_predictor_program_cache_is_batch_bucketed(ovo_problem):
+    x, _, model = ovo_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    pred.warmup(batch_sizes=(32,))
+    n0 = pred.n_programs
+    if n0 < 0:
+        pytest.skip("jit cache size not exposed on this jax version")
+    assert n0 > 0
+    # every batch size in (16, 32] hits the warm 32-bucket programs
+    for nt in (17, 25, 32):
+        pred.decision_values(x[:nt])
+    assert pred.n_programs == n0
+    # a new batch bucket compiles exactly one more program per SV bucket
+    pred.decision_values(x[:4])
+    assert pred.n_programs == n0 + len(model._serving_buckets)
+
+
+def test_predictor_rejects_bad_requests(binary_problem):
+    _, _, model = binary_problem
+    pred = model.predictor()
+    with pytest.raises(ValueError, match="request"):
+        pred.decision_values(np.zeros((3, 9), np.float32))
+    with pytest.raises(ValueError, match="max_batch"):
+        serve.Predictor(serve.pack(model), max_batch=0)
+
+
+def test_refit_invalidates_predictor_cache(binary_problem):
+    x, y, _ = binary_problem
+    clf = SVC(solver="smo", gamma=0.5).fit(x, y)
+    first = clf.predictor()
+    assert clf.predictor() is first          # cached across calls
+    clf.fit(x, y)
+    assert clf.predictor() is not first      # repacked on refit

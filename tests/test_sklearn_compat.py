@@ -1,0 +1,158 @@
+"""sklearn-compatibility bugfix sweep (PR 5).
+
+Pins the four behaviors the bugfix satellites fixed:
+
+1. binary label orientation — ``fit`` encodes ``classes_[1]`` as +1, so
+   a POSITIVE ``decision_function`` margin predicts ``classes_[1]``
+   (sklearn's convention; it used to be inverted), parity-tested
+   against ``sklearn.svm.SVC`` on a fixture;
+2. single-class ``y`` raises a clear ``ValueError`` instead of falling
+   through to a degenerate OvO task set;
+3. the support threshold is RELATIVE to C — small-C fits keep their
+   support vectors instead of collapsing to a constant-bias predictor;
+4. ``gamma="scale"`` on constant / near-constant features falls back to
+   ``gamma = 1.0`` (sklearn) instead of the 1e12 of the old variance
+   clamp.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import kernels as K
+from repro.core.svm import SVC, SVR
+from repro.data.synth import make_blobs
+
+sklearn_svm = pytest.importorskip("sklearn.svm")
+
+
+@pytest.fixture(scope="module")
+def binary_fixture():
+    x, y = make_blobs(25, 2, 4, sep=2.0, seed=7)
+    return x, y
+
+
+# ------------------------------------------------- 1. label orientation
+class TestBinaryOrientation:
+    def test_decision_sign_parity_with_sklearn(self, binary_fixture):
+        x, y = binary_fixture
+        ours = SVC(kernel="rbf", C=1.0, gamma=0.5).fit(x, y)
+        ref = sklearn_svm.SVC(kernel="rbf", C=1.0, gamma=0.5).fit(x, y)
+        df_ours = ours.decision_function(x)
+        df_ref = ref.decision_function(x)
+        np.testing.assert_array_equal(ours.classes_, ref.classes_)
+        np.testing.assert_array_equal(ours.predict(x), ref.predict(x))
+        # same QP, same convention: margins agree in sign AND value
+        confident = np.abs(df_ref) > 1e-3
+        assert confident.all()
+        np.testing.assert_array_equal(np.sign(df_ours), np.sign(df_ref))
+        np.testing.assert_allclose(df_ours, df_ref, rtol=1e-2, atol=1e-2)
+
+    def test_positive_margin_predicts_second_class(self, binary_fixture):
+        x, y = binary_fixture
+        clf = SVC(kernel="rbf", C=1.0, gamma=0.5).fit(x, y)
+        df = clf.decision_function(x)
+        pred = clf.predict(x)
+        assert (df != 0).all()
+        np.testing.assert_array_equal(
+            pred, np.where(df > 0, clf.classes_[1], clf.classes_[0]))
+
+    def test_orientation_holds_for_gd_solver(self, binary_fixture):
+        x, y = binary_fixture
+        clf = SVC(solver="gd", gd_steps=2000, gamma=0.5).fit(x, y)
+        ref = sklearn_svm.SVC(kernel="rbf", C=1.0, gamma=0.5).fit(x, y)
+        agree = np.mean(clf.predict(x) == ref.predict(x))
+        assert agree >= 0.95  # GD is approximate; orientation must hold
+
+
+# --------------------------------------------------- 2. single-class y
+class TestSingleClass:
+    def test_single_class_fit_raises(self):
+        x = np.random.default_rng(0).normal(size=(10, 3)).astype(np.float32)
+        with pytest.raises(ValueError, match="2 classes"):
+            SVC().fit(x, np.zeros(10))
+
+    def test_sklearn_also_rejects_single_class(self):
+        x = np.ones((6, 2), np.float32)
+        with pytest.raises(ValueError):
+            sklearn_svm.SVC().fit(x, np.zeros(6))
+
+
+# ------------------------------------------- 3. relative SV threshold
+class TestSmallCSupportThreshold:
+    def test_small_c_binary_keeps_support_vectors(self, binary_fixture):
+        x, y = binary_fixture
+        clf = SVC(kernel="rbf", C=1e-6, gamma=0.5).fit(x, y)
+        assert clf.n_support_ > 0          # used to drop EVERY SV
+        df = clf.decision_function(x)
+        assert np.std(df) > 0              # not the constant-b predictor
+        assert clf.score(x, y) >= 0.9      # tiny-C margins still rank
+
+    def test_small_c_multiclass_keeps_support_vectors(self):
+        x, y = make_blobs(15, 3, 4, sep=4.0, seed=8)
+        clf = SVC(kernel="rbf", C=1e-6, gamma=0.5).fit(x, y)
+        assert np.all(clf.n_support_ > 0)  # per-task compaction too
+        assert clf.score(x, y) >= 0.9
+
+    def test_small_c_svr_keeps_support_vectors(self):
+        rng = np.random.default_rng(9)
+        x = rng.uniform(-1, 1, size=(50, 3)).astype(np.float32)
+        yv = x[:, 0] + 0.1 * rng.normal(size=50)
+        reg = SVR(C=1e-6, epsilon=0.01, gamma=0.5).fit(x, yv)
+        assert reg.n_support_ > 0
+        assert np.std(reg.predict(x)) > 0
+
+    def test_large_c_compaction_still_drops_non_svs(self, binary_fixture):
+        x, y = binary_fixture
+        clf = SVC(kernel="rbf", C=10.0, gamma=0.5).fit(x, y)
+        assert 0 < clf.n_support_ < len(y)
+
+
+# ------------------------------------------------- 4. gamma="scale"
+class TestGammaScaleFallback:
+    def test_constant_features_fall_back_to_one(self):
+        x = np.full((12, 5), 3.25, np.float32)
+        kp = K.resolve_gamma(K.KernelParams(gamma=-1.0), x)
+        assert kp.gamma == 1.0
+
+    def test_near_constant_features_fall_back_to_one(self):
+        x = np.full((12, 5), 3.25, np.float32)
+        x[0, 0] += 1e-7                    # var ~ 1e-16: below the floor
+        kp = K.resolve_gamma(K.KernelParams(gamma=-1.0), x)
+        assert kp.gamma == 1.0
+
+    def test_matches_sklearn_scale_on_regular_data(self):
+        x, _ = make_blobs(20, 2, 6, seed=10)
+        kp = K.resolve_gamma(K.KernelParams(gamma=-1.0), x)
+        want = 1.0 / (x.shape[1] * x.var())
+        np.testing.assert_allclose(kp.gamma, want, rtol=1e-5)
+
+    def test_fit_on_constant_features_is_not_degenerate(self):
+        # constant features + two classes: the old gamma ~ 1e12 made the
+        # Gram the identity; gamma = 1.0 keeps it well-conditioned
+        rng = np.random.default_rng(11)
+        x = np.full((20, 4), 2.0, np.float32)
+        y = np.r_[np.zeros(10), np.ones(10)]
+        x[y == 1, 0] += 1e-9               # numerically constant
+        clf = SVC(kernel="rbf").fit(x, y)
+        assert clf.kernel_params.gamma == 1.0
+
+    def test_explicit_gamma_untouched(self):
+        x = np.full((8, 3), 1.0, np.float32)
+        kp = K.resolve_gamma(K.KernelParams(gamma=0.7), x)
+        assert kp.gamma == 0.7
+        assert dataclasses.replace(kp).gamma == 0.7
+
+    def test_refit_re_resolves_gamma_from_new_data(self):
+        # sklearn recomputes 'scale' on every fit; resolving into the
+        # stored params once and reusing it would serve the second fit
+        # with the FIRST dataset's gamma
+        x1, y1 = make_blobs(15, 2, 4, sep=2.0, seed=12, cov_scale=1.0)
+        x2, y2 = make_blobs(15, 2, 4, sep=20.0, seed=13, cov_scale=10.0)
+        clf = SVC(kernel="rbf").fit(x1, y1)
+        g1 = clf.kernel_params.gamma
+        clf.fit(x2, y2)
+        g2 = clf.kernel_params.gamma
+        fresh = SVC(kernel="rbf").fit(x2, y2)
+        assert g2 == fresh.kernel_params.gamma
+        assert g1 != g2

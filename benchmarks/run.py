@@ -24,6 +24,12 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
                                       engine serving, requests/s at
                                       batch {1, 32, 256}, JSON lines;
                                       --only serving)
+  beyond-paper  -> tile_sweep        (autotuner tuned-vs-default tile
+                                      configs for the Pallas kernels,
+                                      JSON lines; part of the kernels
+                                      section, or --only tile_sweep for
+                                      the sweep alone; CI smoke uses
+                                      --quick --only tile_sweep)
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
                          "kernels; opt-in extras: large_n,scheduler,"
-                         "sharded,svr,serving")
+                         "sharded,svr,serving,tile_sweep")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -64,6 +70,10 @@ def main(argv=None) -> None:
         bench_portability.main()
     if only is None or "kernels" in only:
         bench_kernels.main()
+        bench_kernels.tile_sweep(quick=args.quick)
+    if only is not None and "tile_sweep" in only:
+        # the autotuner tuned-vs-default JSON alone (CI smoke)
+        bench_kernels.tile_sweep(quick=args.quick)
     if only is not None and "large_n" in only:
         # opt-in: minutes-long at full size (JSON lines, not CSV)
         bench_large_n.main(quick=args.quick)

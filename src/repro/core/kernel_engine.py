@@ -52,6 +52,17 @@ Backends
     This is the engine behind ``core.smo.sharded_binary_smo`` — the JAX
     analog of the paper's per-rank Gram row blocks + MPI_Allreduce.
 
+Mixed precision (engine-level)
+------------------------------
+``EngineConfig(gram_dtype="bf16")`` switches every backend's Gram
+computation to bf16 operands with f32 accumulation: the dense/chunked
+jnp paths via ``kernels.make_gram_fn(..., compute_dtype=...)``, the
+Pallas backend via bf16 tile loads in ``repro.kernels.ops``. Squared
+norms are computed from the same rounded values, so RBF self-similarity
+stays exactly 1. fp32 remains the default; the bf16 path is
+parity-gated against fp32 on the KKT-violation certificate and serving
+deltas in ``tests/test_mixed_precision.py``.
+
 Adaptive shrinking (solver-side, engine-aware)
 ----------------------------------------------
 ``SMOConfig(shrink_every=k)`` turns on mask-based adaptive shrinking in
@@ -163,6 +174,12 @@ class EngineConfig:
     shard_axis:  mesh axis name the sample axis is sharded over —
                  required by (and only meaningful for) the "sharded"
                  backend, which must be built inside a shard_map body.
+    gram_dtype:  Gram compute precision, "fp32" (exact, default) or
+                 "bf16" (mixed precision: bf16 operands with f32
+                 accumulation — halves Gram HBM traffic on every
+                 backend; Pallas tiles load bf16 natively). Training
+                 under bf16 is parity-gated against fp32 by the
+                 KKT-certificate tests (tests/test_mixed_precision.py).
     """
 
     backend: str = "auto"
@@ -170,6 +187,7 @@ class EngineConfig:
     chunk: int = 2048
     dense_limit: int = 8192
     shard_axis: Optional[str] = None
+    gram_dtype: str = "fp32"
 
 
 class KernelEngine:
@@ -183,7 +201,8 @@ class KernelEngine:
         self.n = self.x.shape[0]
         self.kernel = kernel
         self.cfg = cfg
-        self._gram_fn = K.make_gram_fn(kernel)
+        self._gram_fn = K.make_gram_fn(kernel,
+                                       compute_dtype=cfg.gram_dtype)
 
     # -------------------------------------------------------- interface
     def full(self) -> jax.Array:
@@ -339,12 +358,14 @@ class PallasKernelEngine(ChunkedKernelEngine):
                              if kernel.name in ("rbf", "linear") else None)
         row_fn = None
         if kernel.name == "rbf":
-            row_fn = pallas_ops.gram_row_fn(gamma=kernel.gamma)
+            row_fn = pallas_ops.gram_row_fn(gamma=kernel.gamma,
+                                            compute_dtype=cfg.gram_dtype)
         super().__init__(x, kernel, cfg, row_fn=row_fn)
 
     def _pallas_gram(self, a, b):
         return self._ops.rbf_gram(a, b, gamma=self.kernel.gamma,
-                                  mode=self._pallas_mode)
+                                  mode=self._pallas_mode,
+                                  compute_dtype=self.cfg.gram_dtype)
 
     def cross(self, z):
         if self._pallas_mode is None:
@@ -367,7 +388,8 @@ class PallasKernelEngine(ChunkedKernelEngine):
     def decide(self, z, coef, b=0.0):
         if self.kernel.name == "rbf":
             return self._ops.decision(jnp.asarray(z, jnp.float32), self.x,
-                                      coef, b, gamma=self.kernel.gamma)
+                                      coef, b, gamma=self.kernel.gamma,
+                                      compute_dtype=self.cfg.gram_dtype)
         return super().decide(z, coef, b)
 
     def full(self):

@@ -33,46 +33,85 @@ class KernelParams:
     coef0: float = 0.0
 
 
-def linear_gram(a: jax.Array, b: jax.Array) -> jax.Array:
+COMPUTE_DTYPES = ("fp32", "bf16")
+
+
+def _compute_cast(a: jax.Array, b: jax.Array, compute_dtype: str):
+    """Round operands to the Gram compute precision. Under "bf16" both
+    the dot and the squared norms see the SAME rounded values (the dot
+    itself still accumulates in f32 via ``preferred_element_type``), so
+    the RBF zero-distance diagonal stays 1 up to f32 summation-order
+    rounding (~1e-6) instead of drifting by the full bf16 epsilon."""
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                         f"expected one of {COMPUTE_DTYPES}")
+    if compute_dtype == "bf16":
+        return a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    return a.astype(jnp.float32), b.astype(jnp.float32)
+
+
+def linear_gram(a: jax.Array, b: jax.Array, *,
+                compute_dtype: str = "fp32") -> jax.Array:
+    a, b = _compute_cast(a, b, compute_dtype)
     return jnp.dot(a, b.T, preferred_element_type=jnp.float32)
 
 
 def poly_gram(a: jax.Array, b: jax.Array, *, gamma: float, degree: int,
-              coef0: float) -> jax.Array:
-    return (gamma * linear_gram(a, b) + coef0) ** degree
+              coef0: float, compute_dtype: str = "fp32") -> jax.Array:
+    return (gamma * linear_gram(a, b, compute_dtype=compute_dtype)
+            + coef0) ** degree
 
 
 def sigmoid_gram(a: jax.Array, b: jax.Array, *, gamma: float,
-                 coef0: float) -> jax.Array:
-    return jnp.tanh(gamma * linear_gram(a, b) + coef0)
+                 coef0: float, compute_dtype: str = "fp32") -> jax.Array:
+    return jnp.tanh(gamma * linear_gram(a, b, compute_dtype=compute_dtype)
+                    + coef0)
 
 
-def sqdist(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Pairwise squared Euclidean distances, numerically clamped at 0."""
-    a = a.astype(jnp.float32)
-    b = b.astype(jnp.float32)
-    a2 = jnp.sum(a * a, axis=-1, keepdims=True)          # (n, 1)
-    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T        # (1, m)
+def sqdist(a: jax.Array, b: jax.Array, *,
+           compute_dtype: str = "fp32") -> jax.Array:
+    """Pairwise squared Euclidean distances, numerically clamped at 0.
+
+    Norms are accumulated in f32 from the compute-precision values, so
+    the ``sqdist(x, x)`` diagonal stays ~0 (f32 rounding, not bf16
+    epsilon) under bf16; the clamp removes the negative residues."""
+    a, b = _compute_cast(a, b, compute_dtype)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    a2 = jnp.sum(af * af, axis=-1, keepdims=True)        # (n, 1)
+    b2 = jnp.sum(bf * bf, axis=-1, keepdims=True).T      # (1, m)
     d2 = a2 + b2 - 2.0 * jnp.dot(a, b.T, preferred_element_type=jnp.float32)
     return jnp.maximum(d2, 0.0)
 
 
-def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float) -> jax.Array:
-    return jnp.exp(-gamma * sqdist(a, b))
+def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float,
+             compute_dtype: str = "fp32") -> jax.Array:
+    return jnp.exp(-gamma * sqdist(a, b, compute_dtype=compute_dtype))
 
 
-def make_gram_fn(params: KernelParams) -> Callable[[jax.Array, jax.Array], jax.Array]:
-    """Resolve a KernelParams into a jit-friendly ``(A, B) -> K`` closure."""
+def make_gram_fn(params: KernelParams, *, compute_dtype: str = "fp32"
+                 ) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """Resolve a KernelParams into a jit-friendly ``(A, B) -> K`` closure.
+
+    ``compute_dtype`` selects the Gram operand precision ("fp32" the
+    exact default, "bf16" the mixed-precision path: bf16 operands, f32
+    accumulation — the jnp realization of ``EngineConfig.gram_dtype``).
+    """
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                         f"expected one of {COMPUTE_DTYPES}")
     name = params.name
     if name == "linear":
-        return linear_gram
+        return partial(linear_gram, compute_dtype=compute_dtype)
     if name == "poly":
         return partial(poly_gram, gamma=params.gamma, degree=params.degree,
-                       coef0=params.coef0)
+                       coef0=params.coef0, compute_dtype=compute_dtype)
     if name == "sigmoid":
-        return partial(sigmoid_gram, gamma=params.gamma, coef0=params.coef0)
+        return partial(sigmoid_gram, gamma=params.gamma, coef0=params.coef0,
+                       compute_dtype=compute_dtype)
     if name == "rbf":
-        return partial(rbf_gram, gamma=params.gamma)
+        return partial(rbf_gram, gamma=params.gamma,
+                       compute_dtype=compute_dtype)
     raise ValueError(f"unknown kernel {name!r}")
 
 

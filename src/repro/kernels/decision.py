@@ -27,6 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.rbf_gram import (_COMPUTE_DTYPES,
+                                    check_block_divisibility)
+
 
 def _decision_kernel(xt_ref, xr_ref, coef_ref, out_ref, *,
                      gamma: float, n_steps: int):
@@ -36,14 +39,19 @@ def _decision_kernel(xt_ref, xr_ref, coef_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    xt = xt_ref[...].astype(jnp.float32)     # (bt, d)
-    xr = xr_ref[...].astype(jnp.float32)     # (bn, d)
+    xt = xt_ref[...]                          # (bt, d) f32 or bf16
+    xr = xr_ref[...]                          # (bn, d)
     coef = coef_ref[...].astype(jnp.float32)  # (1, bn)
 
+    # dot runs at the tile dtype (bf16 tiles feed the MXU natively) with
+    # f32 accumulation; norms use f32 of the SAME rounded values so the
+    # zero-distance diagonal stays exact under mixed precision
     dot = jax.lax.dot_general(xt, xr, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    t2 = jnp.sum(xt * xt, axis=1, keepdims=True)       # (bt, 1)
-    r2 = jnp.sum(xr * xr, axis=1, keepdims=True).T     # (1, bn)
+    xtf = xt.astype(jnp.float32)
+    xrf = xr.astype(jnp.float32)
+    t2 = jnp.sum(xtf * xtf, axis=1, keepdims=True)     # (bt, 1)
+    r2 = jnp.sum(xrf * xrf, axis=1, keepdims=True).T   # (1, bn)
     kblock = jnp.exp(-gamma * jnp.maximum(t2 + r2 - 2.0 * dot, 0.0))
     out_ref[...] += jnp.sum(kblock * coef, axis=1, keepdims=True)
 
@@ -58,7 +66,15 @@ def decision_pallas(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
     """
     nt, d = x_test.shape
     n, d2 = x_train.shape
-    assert d == d2 and nt % block_t == 0 and n % block_n == 0
+    if d != d2:
+        raise ValueError(f"decision_pallas: feature dims differ "
+                         f"({d} vs {d2})")
+    check_block_divisibility("decision_pallas", nt=(nt, block_t),
+                             n=(n, block_n))
+    if x_test.dtype not in _COMPUTE_DTYPES:
+        x_test = x_test.astype(jnp.float32)
+    if x_train.dtype not in _COMPUTE_DTYPES:
+        x_train = x_train.astype(jnp.float32)
     grid = (nt // block_t, n // block_n)
     kernel = functools.partial(_decision_kernel, gamma=gamma,
                                n_steps=grid[1])
@@ -85,15 +101,17 @@ def _multitask_kernel(xt_ref, sv_ref, coef_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    xt = xt_ref[...].astype(jnp.float32)          # (bt, d)
-    sv = sv_ref[...][0].astype(jnp.float32)       # (bn, d) task-t SV tile
+    xt = xt_ref[...]                              # (bt, d) f32 or bf16
+    sv = sv_ref[...][0]                           # (bn, d) task-t SV tile
     coef = coef_ref[...].astype(jnp.float32)      # (1, bn)
 
     dot = jax.lax.dot_general(xt, sv, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
     if mode == "rbf":
-        t2 = jnp.sum(xt * xt, axis=1, keepdims=True)       # (bt, 1)
-        r2 = jnp.sum(sv * sv, axis=1, keepdims=True).T     # (1, bn)
+        xtf = xt.astype(jnp.float32)
+        svf = sv.astype(jnp.float32)
+        t2 = jnp.sum(xtf * xtf, axis=1, keepdims=True)     # (bt, 1)
+        r2 = jnp.sum(svf * svf, axis=1, keepdims=True).T   # (1, bn)
         kblock = jnp.exp(-gamma * jnp.maximum(t2 + r2 - 2.0 * dot, 0.0))
     else:                                         # linear
         kblock = dot
@@ -114,8 +132,18 @@ def multitask_decision_pallas(x_test: jax.Array, sv_x: jax.Array,
     """
     nt, d = x_test.shape
     n_tasks, w, d2 = sv_x.shape
-    assert d == d2 and nt % block_t == 0 and w % block_n == 0
-    assert coef.shape == (n_tasks, w)
+    if d != d2:
+        raise ValueError(f"multitask_decision_pallas: feature dims "
+                         f"differ ({d} vs {d2})")
+    check_block_divisibility("multitask_decision_pallas",
+                             nt=(nt, block_t), w=(w, block_n))
+    if coef.shape != (n_tasks, w):
+        raise ValueError(f"multitask_decision_pallas: coef shape "
+                         f"{coef.shape} != bank shape {(n_tasks, w)}")
+    if x_test.dtype not in _COMPUTE_DTYPES:
+        x_test = x_test.astype(jnp.float32)
+    if sv_x.dtype not in _COMPUTE_DTYPES:
+        sv_x = sv_x.astype(jnp.float32)
     grid = (n_tasks, nt // block_t, w // block_n)
     kernel = functools.partial(_multitask_kernel, gamma=gamma, mode=mode)
     return pl.pallas_call(

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.rbf_gram import check_block_divisibility
+
 
 def _kkt_kernel(f_ref, alpha_ref, y_ref, mask_ref,
                 upv_ref, upi_ref, lowv_ref, lowi_ref, *,
@@ -60,7 +62,7 @@ def kkt_select_pallas(f: jax.Array, alpha: jax.Array, y: jax.Array,
     Returns (up_val, up_idx, low_val, low_idx), each (n_tiles,).
     """
     n = f.shape[0]
-    assert n % block == 0, (n, block)
+    check_block_divisibility("kkt_select_pallas", n=(n, block))
     n_tiles = n // block
     row = lambda v, dt: v.reshape(1, n).astype(dt)
     kernel = functools.partial(_kkt_kernel, c=c, block=block)

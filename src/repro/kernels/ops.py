@@ -1,10 +1,20 @@
 """Public, padding-aware jit wrappers around the Pallas kernels.
 
 These are the entry points the rest of the framework uses. They
-(1) pad every axis up to the kernel's block multiples (MXU/VMEM
-alignment), (2) dispatch the pallas_call, (3) slice the padding back off.
-``interpret`` defaults to auto: True off-TPU (this container), False on
-real TPU hardware.
+(1) resolve tile/block sizes — explicit arguments win, otherwise the
+``kernels.autotune`` on-disk tuning cache is consulted for this
+(device, kernel, dtype, shape bucket) and the hardcoded defaults are
+the fallback; (2) pad every axis up to the kernel's block multiples
+(MXU/VMEM alignment); (3) dispatch the pallas_call; (4) slice the
+padding back off. ``interpret`` defaults to auto: True off-TPU (this
+container), False on real TPU hardware.
+
+Mixed precision: the Gram-shaped kernels take ``compute_dtype``
+("fp32" | "bf16"). Under "bf16" the operand tiles are cast to bfloat16
+AFTER padding (zeros stay zero), halving the HBM tile traffic, while
+the MXU accumulates in f32 and the RBF epilogue (norms, exp) runs in
+f32 — the engine-level flag ``EngineConfig.gram_dtype`` threads through
+here.
 
 Padding correctness notes:
 * Gram: padded FEATURE columns are zero in both operands -> contribute 0
@@ -20,13 +30,28 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import decision as _decision
 from repro.kernels import kkt_select as _kkt
 from repro.kernels import rbf_gram as _gram
 
+COMPUTE_DTYPES = ("fp32", "bf16")
+
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _check_compute_dtype(compute_dtype: str) -> None:
+    if compute_dtype not in COMPUTE_DTYPES:
+        raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                         f"expected one of {COMPUTE_DTYPES}")
+
+
+def _tile_cast(x: jax.Array, compute_dtype: str) -> jax.Array:
+    """Cast padded operand tiles for the kernel (bf16 tile loads, f32
+    accumulation happens inside the kernels)."""
+    return x.astype(jnp.bfloat16) if compute_dtype == "bf16" else x
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -39,32 +64,43 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+# --------------------------------------------------------------- rbf_gram
 @partial(jax.jit, static_argnames=("gamma", "mode", "block_n", "block_m",
-                                   "block_d", "interpret"))
-def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float = 1.0,
-             mode: str = "rbf", block_n: int = 128, block_m: int = 128,
-             block_d: int = 128, interpret: bool | None = None) -> jax.Array:
-    """K(a, b): (n, m) float32 Gram matrix (rbf or linear)."""
-    if interpret is None:
-        interpret = _auto_interpret()
+                                   "block_d", "compute_dtype", "interpret"))
+def _rbf_gram_padded(a, b, *, gamma, mode, block_n, block_m, block_d,
+                     compute_dtype, interpret):
     n, m = a.shape[0], b.shape[0]
     a = _pad_to(_pad_to(a.astype(jnp.float32), 1, block_d), 0, block_n)
     b = _pad_to(_pad_to(b.astype(jnp.float32), 1, block_d), 0, block_m)
+    a = _tile_cast(a, compute_dtype)
+    b = _tile_cast(b, compute_dtype)
     out = _gram.rbf_gram_pallas(a, b, gamma=gamma, mode=mode,
                                 block_n=block_n, block_m=block_m,
                                 block_d=block_d, interpret=interpret)
     return out[:n, :m]
 
 
-@partial(jax.jit, static_argnames=("c", "block", "interpret"))
-def kkt_select(f: jax.Array, alpha: jax.Array, y: jax.Array,
-               mask: jax.Array, *, c: float = 1.0, block: int = 1024,
-               interpret: bool | None = None):
-    """Fused masked KKT selection: (b_up, i_up, b_low, i_low)."""
+def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float = 1.0,
+             mode: str = "rbf", block_n: int | None = None,
+             block_m: int | None = None, block_d: int | None = None,
+             compute_dtype: str = "fp32",
+             interpret: bool | None = None) -> jax.Array:
+    """K(a, b): (n, m) float32 Gram matrix (rbf or linear). Block sizes
+    left as ``None`` resolve through the autotune cache."""
+    _check_compute_dtype(compute_dtype)
     if interpret is None:
         interpret = _auto_interpret()
-    n = f.shape[0]
-    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    blocks = autotune.resolve_blocks(
+        "rbf_gram", (a.shape[0], b.shape[0], a.shape[1]), compute_dtype,
+        {"block_n": block_n, "block_m": block_m, "block_d": block_d})
+    return _rbf_gram_padded(a, b, gamma=gamma, mode=mode,
+                            compute_dtype=compute_dtype,
+                            interpret=interpret, **blocks)
+
+
+# ------------------------------------------------------------- kkt_select
+@partial(jax.jit, static_argnames=("c", "block", "interpret"))
+def _kkt_select_padded(f, alpha, y, mask, *, c, block, interpret):
     fp = _pad_to(f.astype(jnp.float32), 0, block)
     ap = _pad_to(alpha.astype(jnp.float32), 0, block)
     # padded y = +1 with alpha = 0 would look movable; mask handles it
@@ -78,32 +114,79 @@ def kkt_select(f: jax.Array, alpha: jax.Array, y: jax.Array,
     return upv[t_up], upi[t_up], lowv[t_low], lowi[t_low]
 
 
-@partial(jax.jit, static_argnames=("gamma", "block_t", "block_n",
-                                   "interpret"))
-def decision(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
-             b: jax.Array | float = 0.0, *, gamma: float = 1.0,
-             block_t: int = 128, block_n: int = 128,
-             interpret: bool | None = None) -> jax.Array:
-    """f(z) = K(z, X) @ coef + b for a batch of test rows."""
+def kkt_select(f: jax.Array, alpha: jax.Array, y: jax.Array,
+               mask: jax.Array, *, c: float = 1.0,
+               block: int | None = None,
+               interpret: bool | None = None):
+    """Fused masked KKT selection: (b_up, i_up, b_low, i_low)."""
     if interpret is None:
         interpret = _auto_interpret()
+    n = f.shape[0]
+    block = autotune.resolve_blocks("kkt_select", (n,), "fp32",
+                                    {"block": block})["block"]
+    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    return _kkt_select_padded(f, alpha, y, mask, c=c, block=block,
+                              interpret=interpret)
+
+
+# --------------------------------------------------------------- decision
+@partial(jax.jit, static_argnames=("gamma", "block_t", "block_n",
+                                   "compute_dtype", "interpret"))
+def _decision_padded(x_test, x_train, coef, b, *, gamma, block_t, block_n,
+                     compute_dtype, interpret):
     nt = x_test.shape[0]
     d_mult = 128
     xt = _pad_to(_pad_to(x_test.astype(jnp.float32), 1, d_mult), 0, block_t)
     xr = _pad_to(_pad_to(x_train.astype(jnp.float32), 1, d_mult), 0, block_n)
     cf = _pad_to(coef.astype(jnp.float32), 0, block_n)
+    xt = _tile_cast(xt, compute_dtype)
+    xr = _tile_cast(xr, compute_dtype)
     out = _decision.decision_pallas(xt, xr, cf, gamma=gamma,
                                     block_t=block_t, block_n=block_n,
                                     interpret=interpret)
     return out[:nt] + b
 
 
+def decision(x_test: jax.Array, x_train: jax.Array, coef: jax.Array,
+             b: jax.Array | float = 0.0, *, gamma: float = 1.0,
+             block_t: int | None = None, block_n: int | None = None,
+             compute_dtype: str = "fp32",
+             interpret: bool | None = None) -> jax.Array:
+    """f(z) = K(z, X) @ coef + b for a batch of test rows."""
+    _check_compute_dtype(compute_dtype)
+    if interpret is None:
+        interpret = _auto_interpret()
+    blocks = autotune.resolve_blocks(
+        "decision", (x_test.shape[0], x_train.shape[0], x_test.shape[1]),
+        compute_dtype, {"block_t": block_t, "block_n": block_n})
+    return _decision_padded(x_test, x_train, coef, b, gamma=gamma,
+                            compute_dtype=compute_dtype,
+                            interpret=interpret, **blocks)
+
+
+# ----------------------------------------------------- multitask_decision
 @partial(jax.jit, static_argnames=("gamma", "mode", "block_t", "block_n",
-                                   "interpret"))
+                                   "compute_dtype", "interpret"))
+def _multitask_decision_padded(x_test, sv_x, coef, b, *, gamma, mode,
+                               block_t, block_n, compute_dtype, interpret):
+    nt = x_test.shape[0]
+    d_mult = 128
+    xt = _pad_to(_pad_to(x_test.astype(jnp.float32), 1, d_mult), 0, block_t)
+    sv = _pad_to(_pad_to(sv_x.astype(jnp.float32), 2, d_mult), 1, block_n)
+    cf = _pad_to(coef.astype(jnp.float32), 1, block_n)
+    xt = _tile_cast(xt, compute_dtype)
+    sv = _tile_cast(sv, compute_dtype)
+    out = _decision.multitask_decision_pallas(
+        xt, sv, cf, gamma=gamma, mode=mode, block_t=block_t,
+        block_n=block_n, interpret=interpret)[:, :nt]
+    return out if b is None else out + b[:, None].astype(jnp.float32)
+
+
 def multitask_decision(x_test: jax.Array, sv_x: jax.Array, coef: jax.Array,
                        b: jax.Array | None = None, *, gamma: float = 1.0,
-                       mode: str = "rbf", block_t: int = 128,
-                       block_n: int = 128,
+                       mode: str = "rbf", block_t: int | None = None,
+                       block_n: int | None = None,
+                       compute_dtype: str = "fp32",
                        interpret: bool | None = None) -> jax.Array:
     """f_t(z) = K(z, SV_t) @ coef_t + b_t for a stacked (T, w, d) SV bank.
 
@@ -115,6 +198,7 @@ def multitask_decision(x_test: jax.Array, sv_x: jax.Array, coef: jax.Array,
     if mode not in ("rbf", "linear"):
         raise ValueError(f"unknown multitask decision mode {mode!r}; "
                          "expected 'rbf' or 'linear'")
+    _check_compute_dtype(compute_dtype)
     if interpret is None:
         interpret = _auto_interpret()
     nt = x_test.shape[0]
@@ -122,14 +206,13 @@ def multitask_decision(x_test: jax.Array, sv_x: jax.Array, coef: jax.Array,
     if w == 0:  # no support vectors anywhere: constant-bias predictor
         out = jnp.zeros((n_tasks, nt), jnp.float32)
         return out if b is None else out + b[:, None].astype(jnp.float32)
-    d_mult = 128
-    xt = _pad_to(_pad_to(x_test.astype(jnp.float32), 1, d_mult), 0, block_t)
-    sv = _pad_to(_pad_to(sv_x.astype(jnp.float32), 2, d_mult), 1, block_n)
-    cf = _pad_to(coef.astype(jnp.float32), 1, block_n)
-    out = _decision.multitask_decision_pallas(
-        xt, sv, cf, gamma=gamma, mode=mode, block_t=block_t,
-        block_n=block_n, interpret=interpret)[:, :nt]
-    return out if b is None else out + b[:, None].astype(jnp.float32)
+    blocks = autotune.resolve_blocks(
+        "multitask_decision", (n_tasks, nt, w, x_test.shape[1]),
+        compute_dtype, {"block_t": block_t, "block_n": block_n})
+    return _multitask_decision_padded(x_test, sv_x, coef, b, gamma=gamma,
+                                      mode=mode,
+                                      compute_dtype=compute_dtype,
+                                      interpret=interpret, **blocks)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -167,13 +250,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out[:, :sq]
 
 
-def gram_row_fn(*, gamma: float, block: int = 128, mode: str = "rbf",
+def gram_row_fn(*, gamma: float, block: int | None = None,
+                mode: str = "rbf", compute_dtype: str = "fp32",
                 interpret: bool | None = None):
     """``(X, z) -> K(X, z)`` single-row closure for the SMO f-cache update
     (the on-the-fly, O(n d)-memory mode used by the chunked/Pallas
-    ``KernelEngine`` backends; ``mode`` mirrors ``rbf_gram``)."""
+    ``KernelEngine`` backends; ``mode``/``compute_dtype`` mirror
+    ``rbf_gram``)."""
     def row(x, z):
         return rbf_gram(x, z[None, :], gamma=gamma, mode=mode,
                         block_n=block, block_m=128,
+                        compute_dtype=compute_dtype,
                         interpret=interpret)[:, 0]
     return row

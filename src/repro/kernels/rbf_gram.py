@@ -17,7 +17,17 @@ MXU-aligned VMEM blocks:
 
 VMEM working set per step = bn·bd + bm·bd + bn·bm floats; the default
 (128, 128, 128) tiles use ≈ 192 KiB — far under the ~16 MiB/core budget,
-leaving room for the pipeline's double buffering.
+leaving room for the pipeline's double buffering. The default tiles are
+only a safe baseline: ``kernels.autotune`` hillclimbs (bn, bm, bd) per
+(device kind, dtype, shape bucket) and ``ops.rbf_gram`` picks tuned
+values up from the on-disk cache.
+
+Mixed precision: bf16 inputs are fed to the MXU as-is (halving the HBM
+tile traffic) while the dot accumulates in f32
+(``preferred_element_type``) and the RBF epilogue runs in f32 — the
+squared norms are computed OUTSIDE in f32 from the same (rounded)
+operand values, so K(x, x) stays 1 up to f32 rounding (~1e-6), not
+bf16 epsilon.
 
 The d-axis (reduction) must be the innermost, sequential grid dimension:
 the output block is revisited across d-steps (TPU grids are sequential by
@@ -31,6 +41,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_COMPUTE_DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def check_block_divisibility(name: str, **axis_blocks) -> None:
+    """Uniform padded-shape validation for the Pallas kernels.
+
+    Each kwarg maps an axis label to a ``(size, block)`` pair; any axis
+    not a multiple of its block raises a ValueError naming the fix —
+    direct callers (and odd tile choices coming out of the autotuner)
+    get a clear error instead of a bare assert tuple. The ``ops.py``
+    wrappers pad before calling, so they never trip this.
+    """
+    bad = {axis: (size, block) for axis, (size, block) in
+           axis_blocks.items() if size % block != 0}
+    if bad:
+        detail = ", ".join(f"{axis}={size} % block={block}"
+                           for axis, (size, block) in bad.items())
+        raise ValueError(
+            f"{name}: inputs must be pre-padded to block multiples "
+            f"({detail}); call the padding-aware wrapper in "
+            f"repro.kernels.ops, or pad the operands / pick block sizes "
+            f"dividing the shape")
+
 
 def _rbf_gram_kernel(a_ref, b_ref, a2_ref, b2_ref, out_ref, *,
                      gamma: float, n_d_steps: int, mode: str):
@@ -41,8 +74,8 @@ def _rbf_gram_kernel(a_ref, b_ref, a2_ref, b2_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = a_ref[...].astype(jnp.float32)          # (bn, bd)
-    b = b_ref[...].astype(jnp.float32)          # (bm, bd)
+    a = a_ref[...]                              # (bn, bd) f32 or bf16
+    b = b_ref[...]                              # (bm, bd)
     out_ref[...] += jax.lax.dot_general(
         a, b, (((1,), (1,)), ((), ())),          # a @ b.T on the MXU
         preferred_element_type=jnp.float32)
@@ -61,12 +94,19 @@ def rbf_gram_pallas(a: jax.Array, b: jax.Array, *, gamma: float,
                     interpret: bool = True) -> jax.Array:
     """Gram block K(a, b) of shape (n, m). Inputs must be pre-padded to
     multiples of the block sizes (see ``ops.rbf_gram`` for the public,
-    padding-aware wrapper)."""
+    padding-aware wrapper). bf16 inputs run the mixed-precision path:
+    bf16 tile loads, f32 accumulation and epilogue."""
     n, d = a.shape
     m, d2 = b.shape
-    assert d == d2
-    assert n % block_n == 0 and m % block_m == 0 and d % block_d == 0, (
-        (n, m, d, block_n, block_m, block_d))
+    if d != d2:
+        raise ValueError(f"rbf_gram_pallas: feature dims differ "
+                         f"({d} vs {d2})")
+    check_block_divisibility("rbf_gram_pallas", n=(n, block_n),
+                             m=(m, block_m), d=(d, block_d))
+    if a.dtype not in _COMPUTE_DTYPES:
+        a = a.astype(jnp.float32)
+    if b.dtype not in _COMPUTE_DTYPES:
+        b = b.astype(jnp.float32)
     grid = (n // block_n, m // block_m, d // block_d)
 
     a2 = jnp.sum(a.astype(jnp.float32) ** 2, axis=1, keepdims=True)  # (n,1)

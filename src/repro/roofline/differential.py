@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Depth-differential roofline probe.
 
 XLA ``cost_analysis`` (and the HLO collective scan) count a
@@ -20,6 +15,10 @@ shared-attn period 6, deepseek-moe leading dense layer).
 
     PYTHONPATH=src python -m repro.roofline.differential \
         [--arch X --shape Y] [--multi-pod] [--out results/diff.jsonl]
+
+The forced-host-device XLA env is applied in ``main()`` (via
+``hillclimb.setup_env``), not at import time — importing this module
+must not mutate the process's jax environment.
 """
 import argparse
 import json
@@ -77,6 +76,8 @@ def probe(arch: str, shape: str, *, multi_pod: bool) -> dict:
 
 
 def main(argv=None):
+    from repro.roofline.hillclimb import setup_env
+    setup_env()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES)
     ap.add_argument("--shape", choices=list(INPUT_SHAPES))

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """§Perf hillclimb driver: variant -> corrected roofline terms.
 
     PYTHONPATH=src python -m repro.roofline.hillclimb \
@@ -14,10 +9,30 @@ Each variant toggles runtime knobs (repro.models.runtime), then measures:
     (unrolled shallow compiles — true per-layer costs), and
   * full-depth compile temp/arg memory (peak per-device bytes — the
     "does it fit 16 GB HBM" check).
+
+The 512-forced-host-device XLA environment is set up in ``main()``
+(before any jax import), NOT at import time: other tooling (the SVM
+kernel autotuner, ``inspect_hlo``) imports this module for its VARIANTS
+table, and an import-time ``os.environ`` mutation would silently poison
+every jax backend in the host process.
 """
 import argparse
 import json
+import os
 import sys
+
+
+def setup_env(n_devices: int = 512) -> None:
+    """Force the multi-host-device CPU platform for dry-run compiles.
+
+    Must run before jax initializes its backends — i.e. first thing in
+    a CLI entry point, never at module import.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_devices} "
+            + flags).strip()
 
 VARIANTS = {
     "baseline": {},
@@ -101,6 +116,7 @@ def run(arch: str, shape: str, variant: str, *, multi_pod: bool = False,
 
 
 def main(argv=None):
+    setup_env()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

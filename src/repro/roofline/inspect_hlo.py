@@ -1,13 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Collective attribution: top-N largest collectives in a compiled combo,
 with their op_name metadata (maps each collective back to model source).
 
     PYTHONPATH=src python -m repro.roofline.inspect_hlo \
         --arch gemma3_12b --shape decode_32k [--variant onehot_embed]
+
+Forced-device XLA env applied in ``main()`` (``hillclimb.setup_env``),
+not at import time.
 """
 import argparse
 import re

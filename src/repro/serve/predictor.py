@@ -80,8 +80,9 @@ class Predictor:
         """(T, w, d) stacked bank x (B, d) batch -> (T, B) decisions."""
         kp = self.model.kernel
         if self.engine_cfg.backend == "pallas" and kp.name == "rbf":
-            return ops.multitask_decision(z, sv_x, sv_coef, b,
-                                          gamma=kp.gamma, mode="rbf")
+            return ops.multitask_decision(
+                z, sv_x, sv_coef, b, gamma=kp.gamma, mode="rbf",
+                compute_dtype=self.engine_cfg.gram_dtype)
 
         def one(sv, cf, bb):
             return KE.make_engine(sv, kp, self.engine_cfg).decide(z, cf, bb)

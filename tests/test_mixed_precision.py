@@ -1,0 +1,228 @@
+"""bf16 Gram parity gates: ``EngineConfig.gram_dtype = "bf16"`` trades
+operand precision for HBM bandwidth; these tests pin exactly how much
+accuracy that trade costs, via the solver-independent KKT certificate
+(``smo.kkt_violation`` on an fp64 reference Gram) and served-decision
+deltas.
+
+Documented tolerances (empirical values carry ~4x margin):
+
+* Gram entries:     |K_bf16 - K_fp64| <= 2e-2; the RBF diagonal stays
+  within f32 rounding (1e-5) of 1, NOT bf16 epsilon — the norms are
+  computed from the SAME bf16-rounded operands as the dot
+* KKT certificate:  fp32 fit <= 5e-3, bf16 fit <= 2e-2 across
+  {binary SVC, ovo SVC, epsilon-SVR}
+* decisions:        |f_bf16 - f_fp32| <= 3e-2 on trained models and on
+  the serving path (same packed fp32 model served at both precisions)
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import kernels as K, smo
+from repro.core.kernel_engine import EngineConfig, make_engine
+from repro.core.svm import SVC, SVR
+from repro.data import make_blobs, make_synth_regression
+from repro.kernels import ops
+from repro.serve import pack
+from repro.serve.predictor import Predictor
+
+GRAM_TOL = 2e-2
+KKT_TOL = {"fp32": 5e-3, "bf16": 2e-2}
+DECISION_TOL = 3e-2
+
+BACKENDS = ["chunked", "pallas"]
+
+
+def _rbf_ref64(a, b, gamma):
+    d2 = ((a[:, None, :].astype(np.float64)
+           - b[None, :, :].astype(np.float64)) ** 2).sum(-1)
+    return np.exp(-gamma * d2)
+
+
+def _svc_violation(clf: SVC, x, y) -> float:
+    """fp64-reference certificate for a fitted binary SVC (independent
+    of whatever Gram precision the solver used)."""
+    yy = np.where(y == clf.classes_[1], 1.0, -1.0)
+    g = _rbf_ref64(x, x, clf.kernel_params.gamma)
+    alpha = np.asarray(clf.alpha_, np.float64)
+    f = g @ (alpha * yy) - yy
+    return float(smo.kkt_violation(alpha, yy, f, 0.0, clf.smo_cfg.C))
+
+
+def _svr_violation(reg: SVR, x, y) -> float:
+    n = x.shape[0]
+    g = _rbf_ref64(x, x, reg.kernel_params.gamma)
+    g2 = np.tile(g, (2, 2))
+    s = np.r_[np.ones(n), -np.ones(n)]
+    p = np.r_[reg.epsilon - y, reg.epsilon + y].astype(np.float64)
+    a2 = np.asarray(reg.alpha_raw_, np.float64)
+    f = g2 @ (a2 * s) + s * p
+    return float(smo.kkt_violation(a2, s, f, 0.0, reg.smo_cfg.C))
+
+
+def _ovo_max_violation(clf: SVC) -> float:
+    """Certify every one-vs-one subproblem of a multiclass fit."""
+    worst = 0.0
+    for t, task in enumerate(clf._taskset.tasks):
+        g = _rbf_ref64(task.x, task.x, clf.kernel_params.gamma)
+        yy = np.asarray(task.y, np.float64)
+        alpha = np.asarray(clf._fit.alpha[t, :task.size], np.float64)
+        f = g @ (alpha * yy) - yy
+        worst = max(worst, float(smo.kkt_violation(
+            alpha, yy, f, 0.0, clf.smo_cfg.C)))
+    return worst
+
+
+# -------------------------------------------------------------- Gram level
+def test_core_gram_bf16_close_with_exact_diagonal():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(64, 12)).astype(np.float32)
+    fn32 = K.make_gram_fn(K.KernelParams(name="rbf", gamma=0.3))
+    fn16 = K.make_gram_fn(K.KernelParams(name="rbf", gamma=0.3),
+                          compute_dtype="bf16")
+    ref = _rbf_ref64(a, a, 0.3)
+    aj = jnp.asarray(a)
+    assert np.abs(np.asarray(fn16(aj, aj)) - ref).max() <= GRAM_TOL
+    # same-rounded-operand norms: diag within f32 rounding of 1, far
+    # tighter than the ~4e-3 a naive bf16 norm path would give
+    np.testing.assert_allclose(np.diag(np.asarray(fn16(aj, aj))), 1.0,
+                               rtol=0, atol=1e-5)
+    assert np.abs(np.asarray(fn32(aj, aj)) - ref).max() <= 1e-5
+
+
+def test_core_gram_bf16_all_kernel_modes():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    for name in ("linear", "poly", "sigmoid", "rbf"):
+        params = K.KernelParams(name=name, gamma=0.2, degree=2, coef0=0.5)
+        g32 = np.asarray(K.make_gram_fn(params)(a, b), np.float64)
+        g16 = np.asarray(K.make_gram_fn(params, compute_dtype="bf16")(a, b),
+                         np.float64)
+        scale = max(1.0, np.abs(g32).max())
+        assert np.abs(g16 - g32).max() / scale <= GRAM_TOL, name
+
+
+def test_pallas_gram_bf16_close_with_exact_diagonal():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.normal(size=(130, 17)).astype(np.float32))
+    ref = _rbf_ref64(np.asarray(a), np.asarray(a), 0.4)
+    g16 = np.asarray(ops.rbf_gram(a, a, gamma=0.4, compute_dtype="bf16"))
+    assert np.abs(g16 - ref).max() <= GRAM_TOL
+    np.testing.assert_allclose(np.diag(g16), 1.0, rtol=0, atol=1e-5)
+
+
+def test_pallas_decision_kernels_bf16():
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.normal(size=(33, 9)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(70, 9)).astype(np.float32))
+    coef = jnp.asarray(rng.normal(size=(70,)).astype(np.float32))
+    f32 = np.asarray(ops.decision(z, x, coef, 0.5, gamma=0.2))
+    f16 = np.asarray(ops.decision(z, x, coef, 0.5, gamma=0.2,
+                                  compute_dtype="bf16"))
+    assert np.abs(f16 - f32).max() <= DECISION_TOL
+
+    sv = jnp.asarray(rng.normal(size=(3, 40, 9)).astype(np.float32))
+    cf = jnp.asarray(rng.normal(size=(3, 40)).astype(np.float32))
+    bb = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    m32 = np.asarray(ops.multitask_decision(z, sv, cf, bb, gamma=0.2))
+    m16 = np.asarray(ops.multitask_decision(z, sv, cf, bb, gamma=0.2,
+                                            compute_dtype="bf16"))
+    assert np.abs(m16 - m32).max() <= DECISION_TOL
+
+
+def test_invalid_gram_dtype_rejected():
+    with pytest.raises(ValueError, match="compute_dtype"):
+        ops.rbf_gram(jnp.ones((8, 4)), jnp.ones((8, 4)),
+                     compute_dtype="fp16")
+    with pytest.raises(ValueError, match="compute_dtype"):
+        K.make_gram_fn(K.KernelParams(name="rbf", gamma=1.0),
+                       compute_dtype="fp64")(jnp.ones((4, 2)),
+                                             jnp.ones((4, 2)))
+
+
+# ----------------------------------------------------- engine-level parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_gram_respects_gram_dtype(backend):
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(140, 6)).astype(np.float32))
+    params = K.KernelParams(name="rbf", gamma=0.5)
+    eng32 = make_engine(x, params, EngineConfig(backend=backend))
+    eng16 = make_engine(x, params,
+                        EngineConfig(backend=backend, gram_dtype="bf16"))
+    z = x[:12]
+    c32 = np.asarray(eng32.cross(z))
+    c16 = np.asarray(eng16.cross(z))
+    assert np.abs(c16 - c32).max() <= GRAM_TOL
+    assert np.abs(c16 - c32).max() > 0      # bf16 actually engaged
+    d32 = np.asarray(eng32.decide(z, jnp.ones(x.shape[0]), 0.1))
+    d16 = np.asarray(eng16.decide(z, jnp.ones(x.shape[0]), 0.1))
+    assert np.abs(d16 - d32).max() <= x.shape[0] * GRAM_TOL
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("gram_dtype", ["fp32", "bf16"])
+def test_binary_svc_kkt_certificate(backend, gram_dtype):
+    x, y = make_blobs(45, 2, 6, sep=1.2, seed=4)
+    cfg = EngineConfig(backend=backend, gram_dtype=gram_dtype)
+    clf = SVC(C=1.0, gamma=0.5, engine=cfg).fit(x, y)
+    assert clf.converged_
+    assert _svc_violation(clf, x, y) <= KKT_TOL[gram_dtype]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_binary_svc_bf16_decision_delta(backend):
+    x, y = make_blobs(45, 2, 6, sep=1.2, seed=4)
+    dfs = {}
+    for gd in ("fp32", "bf16"):
+        cfg = EngineConfig(backend=backend, gram_dtype=gd)
+        clf = SVC(C=1.0, gamma=0.5, engine=cfg).fit(x, y)
+        dfs[gd] = clf.decision_function(x)
+        assert clf.score(x, y) >= 0.95
+    assert np.abs(dfs["bf16"] - dfs["fp32"]).max() <= DECISION_TOL
+
+
+@pytest.mark.parametrize("gram_dtype", ["fp32", "bf16"])
+def test_ovo_svc_kkt_certificate(gram_dtype):
+    x, y = make_blobs(30, 3, 6, sep=1.4, seed=7)
+    cfg = EngineConfig(backend="pallas", gram_dtype=gram_dtype)
+    clf = SVC(C=1.0, gamma=0.3, engine=cfg).fit(x, y)
+    assert _ovo_max_violation(clf) <= KKT_TOL[gram_dtype]
+    assert clf.score(x, y) >= 0.9
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("gram_dtype", ["fp32", "bf16"])
+def test_svr_kkt_certificate(backend, gram_dtype):
+    x, y = make_synth_regression(120, 4, kind="sinc", noise=0.05, seed=2)
+    cfg = EngineConfig(backend=backend, gram_dtype=gram_dtype)
+    reg = SVR(C=1.0, gamma=0.5, epsilon=0.1, engine=cfg).fit(x, y)
+    assert _svr_violation(reg, x, y) <= KKT_TOL[gram_dtype]
+
+
+def test_svr_bf16_prediction_delta():
+    x, y = make_synth_regression(120, 4, kind="sinc", noise=0.05, seed=2)
+    preds = {}
+    for gd in ("fp32", "bf16"):
+        cfg = EngineConfig(backend="chunked", gram_dtype=gd)
+        preds[gd] = SVR(C=1.0, gamma=0.5, epsilon=0.1,
+                        engine=cfg).fit(x, y).predict(x)
+    assert np.abs(preds["bf16"] - preds["fp32"]).max() <= DECISION_TOL
+
+
+# ------------------------------------------------------------ serving path
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serving_bf16_parity_same_packed_model(backend):
+    """One fp32-fit model served at both precisions: the bf16 server
+    stays within DECISION_TOL of the fp32 server, and labels match."""
+    x, y = make_blobs(30, 3, 6, sep=1.4, seed=7)
+    clf = SVC(C=1.0, gamma=0.3).fit(x, y)
+    packed = pack(clf)
+    p32 = Predictor(packed, engine=EngineConfig(backend=backend))
+    p16 = Predictor(packed, engine=EngineConfig(backend=backend,
+                                                gram_dtype="bf16"))
+    xt = x[:40]
+    d32 = p32.decision_values(xt)
+    d16 = p16.decision_values(xt)
+    assert np.abs(d16 - d32).max() <= DECISION_TOL
+    assert (p16.predict(xt) == p32.predict(xt)).mean() >= 0.97

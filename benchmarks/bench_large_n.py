@@ -14,6 +14,15 @@ JSON line per point via ``benchmarks.common.emit_json``:
 (chunk*n matvec stripe + cache_slots*n LRU rows). Future PRs diff this
 trajectory for regressions as the scaling work proceeds.
 
+``approx_sweep`` is the approximate-tier companion (``--only approx``
+through ``benchmarks.run``): held-out accuracy and wall clock of the
+Nyström / RFF low-rank engines vs the exact chunked SMO across rank at
+a feasible n, plus a million-sample approx-only point where the exact
+path cannot run at all (the dense Gram would be 4 TB) — peak kernel
+memory for the low-rank tier is the (n, rank) feature matrix. In
+``--quick`` mode the sweep doubles as the CI parity smoke: it ASSERTS
+the largest-rank accuracy lands within ``QUICK_GATE`` of exact.
+
     PYTHONPATH=src python -m benchmarks.bench_large_n [--quick]
 """
 from __future__ import annotations
@@ -79,6 +88,98 @@ def main(quick: bool = False) -> None:
     sizes = SIZES[:2] if quick else SIZES
     for n in sizes:
         emit_json(bench_one(n))
+
+
+# ----------------------------------------------------- approximate tier
+APPROX_N = 16384          # exact-vs-approx comparison size
+APPROX_N_QUICK = 4096
+APPROX_TEST = 2048        # held-out rows for accuracy
+RANKS = (64, 128, 256, 512)
+RANKS_QUICK = (64, 128)
+HUGE_N = 1_000_000        # approx-only point; dense Gram would be 4 TB
+HUGE_RANK = 128
+HUGE_EPOCHS = 3           # bounded-wall demo point, not run to tol
+QUICK_GATE = 0.02         # CI smoke: |acc_approx - acc_exact| gate
+
+
+def _approx_problem(n: int, d: int = 8, seed: int = 7):
+    x, y = make_blobs((n + APPROX_TEST) // 2, 2, d, sep=4.0, seed=seed)
+    x = normalize(x)   # make_blobs shuffles, so a tail split is iid
+    return (x[:n], y[:n]), (x[n:n + APPROX_TEST], y[n:n + APPROX_TEST])
+
+
+def _timed_fit(clf, x, y):
+    t0 = time.perf_counter()
+    clf.fit(x, y)
+    return time.perf_counter() - t0
+
+
+def _accuracy(clf, xte, yte) -> float:
+    df = clf._decision_function_engine(xte)
+    pred = clf.classes_[(df > 0).astype(np.int64)]
+    return float(np.mean(pred == yte))
+
+
+def approx_sweep(quick: bool = False) -> None:
+    from repro.core import linear
+    from repro.core.svm import SVC
+
+    n = APPROX_N_QUICK if quick else APPROX_N
+    ranks = RANKS_QUICK if quick else RANKS
+    (xtr, ytr), (xte, yte) = _approx_problem(n)
+
+    exact = SVC(engine=KE.EngineConfig(backend="chunked",
+                                       cache_slots=CACHE_SLOTS,
+                                       chunk=min(CHUNK, n)),
+                shrink_every=4)
+    wall = _timed_fit(exact, xtr, ytr)
+    acc_exact = _accuracy(exact, xte, yte)
+    emit_json({"bench": "approx", "n": n, "engine": "exact-smo",
+               "rank": None, "wall_s": round(wall, 3),
+               "n_iter": exact.n_iter_, "accuracy": round(acc_exact, 4),
+               "acc_delta_vs_exact": 0.0,
+               "peak_gram_bytes": 4 * n * (min(CHUNK, n) + CACHE_SLOTS)})
+
+    last_acc = {}
+    for engine in ("nystrom", "rff"):
+        for rank in ranks:
+            clf = SVC(engine=engine, rank=rank)
+            wall = _timed_fit(clf, xtr, ytr)
+            acc = _accuracy(clf, xte, yte)
+            last_acc[engine] = acc
+            emit_json({"bench": "approx", "n": n, "engine": engine,
+                       "rank": rank, "wall_s": round(wall, 3),
+                       "n_iter": clf.n_iter_,
+                       "converged": clf.converged_,
+                       "accuracy": round(acc, 4),
+                       "acc_delta_vs_exact": round(acc - acc_exact, 4),
+                       "peak_gram_bytes": 4 * n * rank})
+
+    if quick:
+        # CI parity smoke: at the largest quick rank both approximations
+        # must land within QUICK_GATE of the exact-SMO accuracy
+        for engine, acc in last_acc.items():
+            assert acc >= acc_exact - QUICK_GATE, (
+                f"approx parity gate: {engine} accuracy {acc:.4f} vs "
+                f"exact {acc_exact:.4f} (gate {QUICK_GATE})")
+        return
+
+    # the million-sample point: approx-only (no exact baseline exists —
+    # the dense Gram alone would be 4 * n^2 = 4 TB); epochs are bounded
+    # so this is a throughput/feasibility point, not a solve to tol
+    (xtr, ytr), (xte, yte) = _approx_problem(HUGE_N)
+    for engine in ("nystrom", "rff"):
+        clf = SVC(engine=engine, rank=HUGE_RANK)
+        clf.dcd_cfg = linear.DCDConfig(C=clf.smo_cfg.C, tol=clf.smo_cfg.tol,
+                                       max_epochs=HUGE_EPOCHS)
+        wall = _timed_fit(clf, xtr, ytr)
+        acc = _accuracy(clf, xte, yte)
+        emit_json({"bench": "approx", "n": HUGE_N, "engine": engine,
+                   "rank": HUGE_RANK, "wall_s": round(wall, 3),
+                   "n_iter": clf.n_iter_, "max_epochs": HUGE_EPOCHS,
+                   "accuracy": round(acc, 4),
+                   "gram_bytes_dense": 4 * HUGE_N * HUGE_N,
+                   "peak_gram_bytes": 4 * HUGE_N * HUGE_RANK})
 
 
 if __name__ == "__main__":

@@ -1,11 +1,27 @@
-"""Shared benchmark utilities: timing, CSV/JSON emission."""
+"""Shared benchmark utilities: timing, CSV/JSON emission.
+
+Every record that flows through ``emit``/``emit_json`` is also appended
+to the active sink (``set_sink``), which is how ``benchmarks.run``
+collects each suite's results into a stable repo-root
+``BENCH_<suite>.json`` document — one file per suite, sorted keys, so
+successive commits diff cleanly.
+"""
 from __future__ import annotations
 
 import json
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
+
+# active record sink (a plain list) — see module docstring / run.py
+_SINK: Optional[list] = None
+
+
+def set_sink(records: Optional[list]) -> None:
+    """Route every emitted record into ``records`` (None disables)."""
+    global _SINK
+    _SINK = records
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -23,9 +39,14 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if _SINK is not None:
+        _SINK.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                      "derived": derived})
 
 
 def emit_json(record: dict) -> None:
     """One JSON object per line (machine-consumable trajectory points —
     future PRs diff these across commits)."""
     print(json.dumps(record, sort_keys=True), flush=True)
+    if _SINK is not None:
+        _SINK.append(record)

@@ -2,14 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
-Emits ``name,us_per_call,derived`` CSV lines per benchmark:
+Emits ``name,us_per_call,derived`` CSV lines per benchmark, and writes
+every executed suite's records to a repo-root ``BENCH_<suite>.json``
+(stable sorted-keys schema collected through ``common.set_sink`` — the
+machine-consumable trajectory successive commits diff):
   Table III & V -> bench_binary      (binary SMO vs GD training time)
   Table IV      -> bench_multiclass  (9-class OvO parallel vs sequential,
                                       + bucketed-vs-padded scheduler JSON)
   Table VI      -> bench_portability (same program jit vs eager)
   kernels       -> bench_kernels     (hot-spot roofline estimates)
   beyond-paper  -> bench_large_n     (chunked-engine large-n trajectory,
-                                      JSON lines; --only large_n)
+                                      JSON lines; --only large_n — also
+                                      runs the approx-vs-exact sweep)
+  beyond-paper  -> --only approx     (Nystrom/RFF accuracy-vs-rank and
+                                      wall-clock vs the exact SMO, plus
+                                      a million-sample approx-only
+                                      point; --quick is the CI parity
+                                      smoke at small n)
   beyond-paper  -> --only scheduler  (bucketed-vs-padded multiclass
                                       scheduler JSON alone; CI smoke)
   beyond-paper  -> bench_sharded     (single-problem strong scaling vs
@@ -34,7 +43,32 @@ Emits ``name,us_per_call,derived`` CSV lines per benchmark:
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import os
+
+from benchmarks import common
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_suite(name: str, fn) -> None:
+    """Run one suite with the record sink attached; write the collected
+    records to ``<repo>/BENCH_<name>.json`` (skipped when a suite emits
+    nothing, e.g. on an early error path)."""
+    records: list = []
+    common.set_sink(records)
+    try:
+        fn()
+    finally:
+        common.set_sink(None)
+    if not records:
+        return
+    path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "records": records}, f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(records)} records -> {path}", flush=True)
 
 
 def main(argv=None) -> None:
@@ -43,8 +77,8 @@ def main(argv=None) -> None:
                     help="drop the largest sample sizes")
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
-                         "kernels; opt-in extras: large_n,scheduler,"
-                         "sharded,svr,serving,tile_sweep")
+                         "kernels; opt-in extras: large_n,approx,"
+                         "scheduler,sharded,svr,serving,tile_sweep")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -57,38 +91,52 @@ def main(argv=None) -> None:
         bench_multiclass.GD_STEPS = 300
 
     if only is None or "binary" in only:
-        bench_binary.main()
+        _run_suite("binary", bench_binary.main)
     if only is None or "multiclass" in only:
-        bench_multiclass.main()
-        bench_multiclass.bucketed(quick=args.quick)
-        if not args.quick:
-            bench_multiclass.scaling()
+        def _multiclass():
+            bench_multiclass.main()
+            bench_multiclass.bucketed(quick=args.quick)
+            if not args.quick:
+                bench_multiclass.scaling()
+        _run_suite("multiclass", _multiclass)
     if only is not None and "scheduler" in only:
         # the bucketed-vs-padded JSON comparison alone (CI smoke)
-        bench_multiclass.bucketed(quick=args.quick)
+        _run_suite("scheduler",
+                   lambda: bench_multiclass.bucketed(quick=args.quick))
     if only is None or "portability" in only:
-        bench_portability.main()
+        _run_suite("portability", bench_portability.main)
     if only is None or "kernels" in only:
-        bench_kernels.main()
-        bench_kernels.tile_sweep(quick=args.quick)
+        def _kernels():
+            bench_kernels.main()
+            bench_kernels.tile_sweep(quick=args.quick)
+        _run_suite("kernels", _kernels)
     if only is not None and "tile_sweep" in only:
         # the autotuner tuned-vs-default JSON alone (CI smoke)
-        bench_kernels.tile_sweep(quick=args.quick)
+        _run_suite("tile_sweep",
+                   lambda: bench_kernels.tile_sweep(quick=args.quick))
     if only is not None and "large_n" in only:
         # opt-in: minutes-long at full size (JSON lines, not CSV)
-        bench_large_n.main(quick=args.quick)
+        def _large_n():
+            bench_large_n.main(quick=args.quick)
+            bench_large_n.approx_sweep(quick=args.quick)
+        _run_suite("large_n", _large_n)
+    if only is not None and "approx" in only:
+        # opt-in: the approx-vs-exact sweep alone (CI smoke: --quick
+        # asserts the small-n accuracy parity gate)
+        _run_suite("approx",
+                   lambda: bench_large_n.approx_sweep(quick=args.quick))
     if only is not None and "sharded" in only:
         # opt-in: single-problem strong scaling over forced host devices
         from benchmarks import bench_sharded
-        bench_sharded.main(quick=args.quick)
+        _run_suite("sharded", lambda: bench_sharded.main(quick=args.quick))
     if only is not None and "svr" in only:
         # opt-in: the regression analog of the SMO-vs-GD comparison
         from benchmarks import bench_svr
-        bench_svr.main(quick=args.quick)
+        _run_suite("svr", lambda: bench_svr.main(quick=args.quick))
     if only is not None and "serving" in only:
         # opt-in: batched Predictor vs the per-call engine serving path
         from benchmarks import bench_serving
-        bench_serving.main(quick=args.quick)
+        _run_suite("serving", lambda: bench_serving.main(quick=args.quick))
 
 
 if __name__ == "__main__":

@@ -33,8 +33,10 @@ def main():
     packed = serve.pack(clf)
     path = os.path.join(tempfile.mkdtemp(), "iris-svc.npz")
     serve.save(path, packed)
+    version = (serve.SCHEMA_VERSION if packed.feature_map
+               else serve.SCHEMA_VERSION_CLASSIC)
     print(f"packed artifact: {path} ({os.path.getsize(path)} bytes, "
-          f"schema v{serve.SCHEMA_VERSION}, {packed.n_tasks} tasks in "
+          f"schema v{version}, {packed.n_tasks} tasks in "
           f"{len(packed.buckets)} serving buckets)")
 
     # -- serving host: load + warm the decide programs

@@ -1,10 +1,14 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.approx import (LowRankKernelEngine, NystromMap,  # noqa: F401
+                               RFFMap, make_feature_map)
 from repro.core.kernel_engine import (ChunkedKernelEngine,  # noqa: F401
                                       DenseKernelEngine, EngineConfig,
-                                      KernelEngine, PallasKernelEngine,
-                                      make_engine)
+                                      KernelEngine, LOWRANK_BACKENDS,
+                                      PallasKernelEngine, make_engine)
+from repro.core.linear import (DCDConfig, DCDResult,  # noqa: F401
+                               linear_svc, linear_svr)
 from repro.core.multiclass import (BinaryTask, Bucket,  # noqa: F401
                                    MulticlassStrategy, OneVsOneStrategy,
                                    OneVsRestStrategy, Schedule,

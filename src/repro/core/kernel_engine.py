@@ -165,7 +165,11 @@ class RowCache(NamedTuple):
 class EngineConfig:
     """Static engine selection/config — hashable, safe to close over jit.
 
-    backend:     auto | dense | chunked | pallas | sharded.
+    backend:     auto | dense | chunked | pallas | sharded, or one of
+                 the low-rank approximations nystrom | rff
+                 (``repro.core.approx.LowRankKernelEngine``: K ≈ Φ Φ^T
+                 from an explicit (n, rank) feature map — the
+                 million-sample tier).
     cache_slots: LRU row-cache capacity (chunked/pallas row mode).
     chunk:       row-block size for matvec()/decide() streaming.
     dense_limit: 'auto' picks dense up to this n, chunked above; also the
@@ -180,6 +184,11 @@ class EngineConfig:
                  backend; Pallas tiles load bf16 natively). Training
                  under bf16 is parity-gated against fp32 by the
                  KKT-certificate tests (tests/test_mixed_precision.py).
+    rank:        low-rank backends only: feature count (RFF) / landmark
+                 count (Nyström, capped at n).
+    landmarks:   Nyström landmark sampling, "uniform" | "kmeans++".
+    seed:        PRNG seed for landmark choice / frequency sampling —
+                 part of the config so a fit is exactly reproducible.
     """
 
     backend: str = "auto"
@@ -188,6 +197,9 @@ class EngineConfig:
     dense_limit: int = 8192
     shard_axis: Optional[str] = None
     gram_dtype: str = "fp32"
+    rank: int = 256
+    landmarks: str = "uniform"
+    seed: int = 0
 
 
 class KernelEngine:
@@ -468,6 +480,10 @@ _BACKENDS = {
     "sharded": ShardedKernelEngine,
 }
 
+# low-rank approximation backends resolve lazily (repro.core.approx
+# imports this module for the base class / EngineConfig)
+LOWRANK_BACKENDS = ("nystrom", "rff")
+
 
 def make_engine(x: jax.Array, kernel: K.KernelParams,
                 cfg: EngineConfig | str = EngineConfig(), *,
@@ -488,10 +504,14 @@ def make_engine(x: jax.Array, kernel: K.KernelParams,
         return ChunkedKernelEngine(x, kernel, cfg, row_fn=row_fn)
     if backend == "auto":
         backend = "dense" if x.shape[0] <= cfg.dense_limit else "chunked"
+    if backend in LOWRANK_BACKENDS:
+        from repro.core.approx import LowRankKernelEngine
+        return LowRankKernelEngine(x, kernel, cfg)
     try:
         cls = _BACKENDS[backend]
     except KeyError:
         raise ValueError(
-            f"unknown engine backend {backend!r}; "
-            f"expected one of {sorted(_BACKENDS)} or 'auto'") from None
+            f"unknown engine backend {backend!r}; expected one of "
+            f"{sorted([*_BACKENDS, *LOWRANK_BACKENDS])} or 'auto'"
+        ) from None
     return cls(x, kernel, cfg)

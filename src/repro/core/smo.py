@@ -210,7 +210,8 @@ def _shrink_active(f, alpha, y, mask, b_up, b_low, lo, hi, cfg: SMOConfig):
     return mask & (free | keep_up | keep_low)
 
 
-def kkt_violation(alpha, y, f, lo, hi, tol: float = 0.0, mask=None):
+def kkt_violation(alpha, y, f, lo, hi, tol: float = 0.0, mask=None,
+                  r=None):
     """Max per-sample KKT violation of the box QP at ``alpha`` — the
     solver-independent optimality certificate.
 
@@ -229,6 +230,13 @@ def kkt_violation(alpha, y, f, lo, hi, tol: float = 0.0, mask=None):
     projected GD; 0 keeps the solver's own 1e-6 relative rule. Returns 0
     when either index set is empty (any r beyond the occupied side
     certifies).
+
+    ``r`` PINS the equality multiplier instead of minimizing over it:
+    the violation becomes ``max((r - b_up)_+, (b_low - r)_+)``. This is
+    the certificate for box QPs WITHOUT an equality constraint — the
+    dual coordinate descent of ``repro.core.linear``, whose
+    augmented-bias formulation absorbs the offset into the features, is
+    optimal iff the r = 0 conditions hold.
     """
     alpha = jnp.asarray(alpha, jnp.float32)
     f = jnp.asarray(f, jnp.float32)
@@ -245,7 +253,10 @@ def kkt_violation(alpha, y, f, lo, hi, tol: float = 0.0, mask=None):
     low_mask = mask & ((pos & not_lower) | (neg & not_upper))
     b_up = jnp.min(jnp.where(up_mask, f, _BIG))
     b_low = jnp.max(jnp.where(low_mask, f, -_BIG))
-    return jnp.maximum(0.0, (b_low - b_up) / 2.0)
+    if r is None:
+        return jnp.maximum(0.0, (b_low - b_up) / 2.0)
+    r = jnp.float32(r)
+    return jnp.maximum(0.0, jnp.maximum(r - b_up, b_low - r))
 
 
 def _smo_iteration(state: _State, *, y, mask, lo, hi,

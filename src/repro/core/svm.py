@@ -3,6 +3,8 @@
     clf = SVC(kernel="rbf", C=1.0, solver="smo")      # paper's CUDA path
     clf = SVC(kernel="rbf", C=1.0, solver="gd")       # paper's TF baseline
     clf = SVC(engine="chunked", shrink_every=4)       # n >> 8k training
+    clf = SVC(engine="nystrom", rank=512)             # low-rank approx
+    clf = SVC(engine="rff", rank=1024)                # random features
     clf = SVC(strategy="ovr")                         # one-vs-rest
     clf = SVC(decision="margin")                      # OvO summed margins
     clf = SVC(mesh=mesh, shard="data")                # samples sharded
@@ -13,6 +15,7 @@
     reg = SVR(kernel="rbf", C=1.0, epsilon=0.1)       # epsilon-SVR
     reg = SVR(solver="gd")                            # projected-GD dual
     reg = SVR(engine="chunked", shrink_every=4)       # large-n regression
+    reg = SVR(engine="nystrom", rank=512)             # low-rank approx
     reg = SVR(mesh=mesh, shard="data")                # doubled axis sharded
     reg.fit(X, y).predict(Xt); reg.score(Xt, yt)      # R^2
 
@@ -23,6 +26,16 @@ data-parallel sharded solver — the regression solve is ONE QP over the
 doubled (2n) sample axis, so ``shard="data"`` shards that axis over the
 mesh. Serving is compacted exactly like binary SVC: only rows with
 |alpha - alpha*| > 0 are kept.
+
+``engine="nystrom"`` / ``engine="rff"`` switch BOTH classes onto the
+approximate-kernel tier: an explicit low-rank feature map Φ (n, rank)
+(``repro.core.approx``) feeds the O(n·rank) linear dual coordinate
+descent (``repro.core.linear``) instead of the kernel SMO, so training
+memory is O(n·rank) — never (n, n) — and million-sample fits are
+feasible on one device. ``rank`` / ``landmarks`` / ``seed`` tune the
+map; this path always runs locally (``solver``/``mesh``/``shard`` are
+ignored) and serving packs the map arrays plus linear weights instead
+of a support-vector bank.
 
 Multiclass fits go through the strategy layer (``repro.core.multiclass``):
 ``strategy`` picks the decomposition ("ovo" pairwise, "ovr" one-vs-rest),
@@ -78,7 +91,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import dist, gd, kernel_engine as KE, kernels as K
+from repro.core import approx, dist, gd, kernel_engine as KE, kernels as K
+from repro.core import linear
 from repro.core import multiclass as MC
 from repro.core import smo
 from repro import serve
@@ -91,6 +105,16 @@ _SV_EPS = 1e-8
 
 def _sv_threshold(C: float) -> float:
     return _SV_EPS * float(C)
+
+
+def _resolve_fit_inputs(kernel_cfg: K.KernelParams,
+                        x) -> tuple[np.ndarray, K.KernelParams]:
+    """Shared SVC/SVR fit-entry plumbing: f32-cast the training matrix
+    and re-resolve the gamma<=0 "scale" sentinel from THIS data, so a
+    refit on new data recomputes gamma (sklearn semantics) instead of
+    reusing the first fit's value."""
+    x = np.asarray(x, np.float32)
+    return x, K.resolve_gamma(kernel_cfg, jnp.asarray(x))
 
 
 @lru_cache(maxsize=64)
@@ -147,6 +171,8 @@ class SVC:
                  solver: str = "smo", gd_lr: float = 0.01,
                  gd_steps: int = 300,
                  engine: str | KE.EngineConfig = "auto",
+                 rank: int = 256, landmarks: str = "uniform",
+                 seed: int = 0,
                  shrink_every: int = 0,
                  strategy: str | MC.MulticlassStrategy = "ovo",
                  decision: str = "vote",
@@ -165,8 +191,14 @@ class SVC:
                                      shrink_every=shrink_every)
         self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
         self.solver = solver
+        # rank/landmarks/seed only matter for the approximate backends
+        # ("nystrom" | "rff"); they ride in EngineConfig so an explicit
+        # EngineConfig instance carries its own values
         self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
-                           else KE.EngineConfig(backend=engine))
+                           else KE.EngineConfig(backend=engine, rank=rank,
+                                                landmarks=landmarks,
+                                                seed=seed))
+        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol)
         self.strategy = MC.get_strategy(strategy)
         if decision not in ("vote", "margin"):
             raise ValueError(f"unknown OvO decision {decision!r}; "
@@ -192,10 +224,8 @@ class SVC:
 
     # ------------------------------------------------------------------ fit
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVC":
-        x = np.asarray(x, np.float32)
+        x, self.kernel_params = _resolve_fit_inputs(self._kernel_cfg, x)
         y = np.asarray(y)
-        self.kernel_params = K.resolve_gamma(self._kernel_cfg,
-                                             jnp.asarray(x))
         classes = np.unique(y)
         if len(classes) < 2:
             raise ValueError(
@@ -204,8 +234,15 @@ class SVC:
                 f"decision boundary to learn")
         self.classes_ = classes
         self._predictors: dict = {}
+        self._feature_map = None
+        lowrank = self.engine_cfg.backend in KE.LOWRANK_BACKENDS
         if len(classes) == 2:
-            self._fit_binary(x, y, classes)
+            if lowrank:
+                self._fit_binary_lowrank(x, y, classes)
+            else:
+                self._fit_binary(x, y, classes)
+        elif lowrank:
+            self._fit_multiclass_lowrank(x, y)
         else:
             self._fit_multiclass(x, y)
         self._fitted = True
@@ -262,6 +299,68 @@ class SVC:
         self.n_support_ = int(sv.sum())
         self.support_vectors_ = x[sv]
         self.dual_coef_ = (self.alpha_ * yy)[sv].astype(np.float32)
+
+    def _fit_binary_lowrank(self, x, y, classes) -> None:
+        """Approximate-kernel binary fit: explicit low-rank features
+        (Nystrom landmarks / random Fourier features,
+        ``repro.core.approx``) + the O(n k) dual coordinate descent
+        (``repro.core.linear``) — no (n, n) object is ever formed, so n
+        is bounded by O(n·rank) memory, not the Gram. The linear path
+        always runs locally and ignores ``solver``/``mesh``/``shard``."""
+        yy = np.where(y == classes[1], 1.0, -1.0).astype(np.float32)
+        xj = jnp.asarray(x)
+        fmap = approx.make_feature_map(xj, self.kernel_params,
+                                       self.engine_cfg)
+        r = linear.fit_linear_svc(self.dcd_cfg)(fmap.transform(xj),
+                                                jnp.asarray(yy))
+        self._binary = True
+        self._feature_map = fmap
+        self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
+        self.w_ = np.asarray(r.w)
+        self.n_iter_ = int(r.n_iter)
+        self.converged_ = bool(r.converged)
+        sv = self.alpha_ > _sv_threshold(self.smo_cfg.C)
+        self.support_ = np.where(sv)[0]
+        self.n_support_ = int(sv.sum())
+        self.support_vectors_ = x[sv]
+        self.dual_coef_ = (self.alpha_ * yy)[sv].astype(np.float32)
+
+    def _fit_multiclass_lowrank(self, x, y) -> None:
+        """Multiclass over ONE feature map shared by every binary task:
+        each task is a linear DCD solve over its slice of the SAME
+        low-rank feature space, so serving is one feature transform
+        followed by a (n_tasks, rank) matmul — no per-task SV banks."""
+        taskset = self.strategy.build_taskset(x, y)
+        fmap = approx.make_feature_map(jnp.asarray(x), self.kernel_params,
+                                       self.engine_cfg)
+        fit = linear.fit_linear_svc(self.dcd_cfg)
+        n_tasks = taskset.n_tasks
+        task_w = np.zeros((n_tasks, fmap.rank), np.float32)
+        task_b = np.zeros((n_tasks,), np.float32)
+        n_support = np.zeros(n_tasks, np.int64)
+        n_iter = np.zeros(n_tasks, np.int64)
+        converged = np.ones(n_tasks, bool)
+        alphas = []
+        thr = _sv_threshold(self.smo_cfg.C)
+        for t, task in enumerate(taskset.tasks):
+            r = fit(fmap.transform(jnp.asarray(task.x)),
+                    jnp.asarray(task.y))
+            a = np.asarray(r.alpha)
+            alphas.append(a)
+            task_w[t] = np.asarray(r.w)
+            task_b[t] = float(r.b)
+            n_support[t] = int((a > thr).sum())
+            n_iter[t] = int(r.n_iter)
+            converged[t] = bool(r.converged)
+        self._binary = False
+        self._feature_map = fmap
+        self._taskset = taskset
+        self._task_alpha = alphas
+        self.task_w_ = task_w
+        self.task_b_ = task_b
+        self.n_support_ = n_support
+        self.n_iter_ = int(n_iter.max())
+        self.converged_ = bool(converged.all())
 
     def _fit_multiclass(self, x, y) -> None:
         taskset = self.strategy.build_taskset(x, y)
@@ -344,6 +443,15 @@ class SVC:
         the baseline ``benchmarks/bench_serving.py`` measures)."""
         assert self._fitted
         xt = jnp.asarray(np.asarray(xt, np.float32))
+        if self._feature_map is not None:
+            # low-rank linear path: one feature transform, then w (or the
+            # stacked task_w matrix) — no SV bank, no kernel engine
+            phi_t = self._feature_map.transform(xt)
+            if self._binary:
+                return np.asarray(phi_t @ jnp.asarray(self.w_) + self.b_)
+            df = phi_t @ jnp.asarray(self.task_w_).T
+            return (np.asarray(df).T
+                    + self.task_b_[:, None]).astype(np.float32)
         if self._binary:
             if self.n_support_ == 0:  # degenerate fit: constant decision
                 return np.full(xt.shape[0], self.b_, np.float32)
@@ -384,6 +492,8 @@ class SVR:
                  solver: str = "smo", gd_lr: float = 0.01,
                  gd_steps: int = 300,
                  engine: str | KE.EngineConfig = "auto",
+                 rank: int = 256, landmarks: str = "uniform",
+                 seed: int = 0,
                  shrink_every: int = 0,
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",),
@@ -397,8 +507,12 @@ class SVR:
         self.gd_cfg = gd.GDConfig(C=C, lr=gd_lr, steps=gd_steps)
         self.epsilon = float(epsilon)
         self.solver = solver
+        # approximate-backend knobs ride in EngineConfig (see SVC)
         self.engine_cfg = (engine if isinstance(engine, KE.EngineConfig)
-                           else KE.EngineConfig(backend=engine))
+                           else KE.EngineConfig(backend=engine, rank=rank,
+                                                landmarks=landmarks,
+                                                seed=seed))
+        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol)
         self.mesh = mesh
         self.worker_axes = worker_axes
         if shard not in ("task", "data", "auto"):
@@ -424,12 +538,22 @@ class SVR:
 
     # ------------------------------------------------------------------ fit
     def fit(self, x: np.ndarray, y: np.ndarray) -> "SVR":
-        x = np.asarray(x, np.float32)
+        x, self.kernel_params = _resolve_fit_inputs(self._kernel_cfg, x)
         y = np.asarray(y, np.float32)
-        self.kernel_params = K.resolve_gamma(self._kernel_cfg,
-                                             jnp.asarray(x))
+        self._feature_map = None
         eps, ecfg = self.epsilon, self.engine_cfg
-        if self._use_data_parallel(x.shape[0]):
+        if ecfg.backend in KE.LOWRANK_BACKENDS:
+            # approximate-kernel path: low-rank features + linear DCD on
+            # the doubled epsilon-SVR QP (see SVC._fit_binary_lowrank)
+            xj = jnp.asarray(x)
+            fmap = approx.make_feature_map(xj, self.kernel_params, ecfg)
+            r = linear.fit_linear_svr(eps, self.dcd_cfg)(
+                fmap.transform(xj), jnp.asarray(y))
+            self._feature_map = fmap
+            self.w_ = np.asarray(r.w)
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)
+        elif self._use_data_parallel(x.shape[0]):
             r = smo.sharded_svr_smo(
                 jnp.asarray(x), jnp.asarray(y), epsilon=eps,
                 mesh=self.mesh, axis=self.worker_axes[0],
@@ -476,6 +600,9 @@ class SVR:
         ``SVC._decision_function_engine``)."""
         assert self._fitted
         xt = jnp.asarray(np.asarray(xt, np.float32))
+        if self._feature_map is not None:
+            phi_t = self._feature_map.transform(xt)
+            return np.asarray(phi_t @ jnp.asarray(self.w_) + self.b_)
         if self.n_support_ == 0:   # every sample inside the tube
             return np.full(xt.shape[0], self.b_, np.float32)
         eng = KE.make_engine(jnp.asarray(self.support_vectors_),

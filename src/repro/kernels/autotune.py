@@ -61,6 +61,7 @@ VMEM_BUDGET_BYTES = 16 * 2 ** 20
 
 DEFAULTS: dict[str, dict[str, int]] = {
     "rbf_gram": {"block_n": 128, "block_m": 128, "block_d": 128},
+    "rff_features": {"block_n": 128, "block_m": 128, "block_d": 128},
     "kkt_select": {"block": 1024},
     "decision": {"block_t": 128, "block_n": 128},
     "multitask_decision": {"block_t": 128, "block_n": 128},
@@ -72,6 +73,9 @@ _LADDERS: dict[str, dict[str, tuple[int, ...]]] = {
     "rbf_gram": {"block_n": (64, 128, 256, 512),
                  "block_m": (128, 256, 512),
                  "block_d": (128, 256, 512)},
+    "rff_features": {"block_n": (64, 128, 256, 512),
+                     "block_m": (128, 256, 512),
+                     "block_d": (128, 256, 512)},
     "kkt_select": {"block": (256, 512, 1024, 2048, 4096)},
     "decision": {"block_t": (64, 128, 256, 512),
                  "block_n": (128, 256, 512, 1024)},
@@ -97,6 +101,7 @@ def shape_bucket(kernel: str, shape: tuple[int, ...]) -> str:
     (the serving layer already pads batches to pow2 buckets)."""
     axes = {
         "rbf_gram": ("n", "m", "d"),
+        "rff_features": ("n", "k", "d"),
         "kkt_select": ("n",),
         "decision": ("t", "n", "d"),
         "multitask_decision": ("tasks", "t", "w", "d"),
@@ -121,7 +126,7 @@ def device_kind() -> str:
 # ------------------------------------------------------------ candidates
 def _block_dims(kernel: str, shape: tuple[int, ...]) -> dict[str, int]:
     """Map each tunable block axis to the shape axis it tiles."""
-    if kernel == "rbf_gram":
+    if kernel in ("rbf_gram", "rff_features"):
         n, m, d = shape
         return {"block_n": n, "block_m": m, "block_d": d}
     if kernel == "kkt_select":
@@ -144,6 +149,9 @@ def _vmem_bytes(kernel: str, cfg: dict, shape: tuple[int, ...],
     if kernel == "rbf_gram":
         bn, bm, bd = cfg["block_n"], cfg["block_m"], cfg["block_d"]
         return (bn * bd + bm * bd) * es + (bn * bm + bn + bm) * 4
+    if kernel == "rff_features":
+        bn, bm, bd = cfg["block_n"], cfg["block_m"], cfg["block_d"]
+        return (bn * bd + bd * bm) * es + (bn * bm + bm) * 4
     if kernel == "kkt_select":
         return 4 * cfg["block"] * 4
     d = shape[-1]
@@ -215,6 +223,14 @@ def roofline_estimate(kernel: str, shape: tuple[int, ...],
                + _ceil_div(n, bn) * m * d * es    # B re-streamed per i
                + n * m * 4                        # output written once
                + _ceil_div(m, bm) * n * 4 + _ceil_div(n, bn) * m * 4)
+    elif kernel == "rff_features":
+        n, k, d = shape
+        bn, bm = cfg["block_n"], cfg["block_m"]
+        flops = 2.0 * n * k * d + 12.0 * n * k   # matmul + cos epilogue
+        hbm = (_ceil_div(k, bm) * n * d * es      # X re-streamed per j
+               + _ceil_div(n, bn) * k * d * es    # Omega re-streamed per i
+               + n * k * 4                        # features written once
+               + _ceil_div(n, bn) * k * 4)        # phase per i
     elif kernel == "kkt_select":
         n, = shape
         flops = 12.0 * n
@@ -272,6 +288,15 @@ def _bench_closure(kernel: str, shape: tuple[int, ...], dtype: str,
         b = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
         return lambda: ops.rbf_gram(a, b, gamma=0.5, compute_dtype=dtype,
                                     **cfg)
+    if kernel == "rff_features":
+        n, k, d = shape
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        omega = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+        phase = jnp.asarray(
+            rng.uniform(0, 2 * np.pi, size=k).astype(np.float32))
+        scale = float(np.sqrt(2.0 / k))
+        return lambda: ops.rff_features(x, omega, phase, scale=scale,
+                                        compute_dtype=dtype, **cfg)
     if kernel == "kkt_select":
         n, = shape
         f = jnp.asarray(rng.normal(size=n).astype(np.float32))

@@ -98,6 +98,46 @@ def rbf_gram(a: jax.Array, b: jax.Array, *, gamma: float = 1.0,
                             interpret=interpret, **blocks)
 
 
+# ----------------------------------------------------------- rff_features
+@partial(jax.jit, static_argnames=("scale", "block_n", "block_m",
+                                   "block_d", "compute_dtype", "interpret"))
+def _rff_features_padded(x, omega, phase, *, scale, block_n, block_m,
+                         block_d, compute_dtype, interpret):
+    from repro.kernels import feature_map as _fmap
+    n, k = x.shape[0], omega.shape[1]
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 1, block_d), 0, block_n)
+    wp = _pad_to(_pad_to(omega.astype(jnp.float32), 0, block_d), 1, block_m)
+    # padded frequency columns see omega = phase = 0 -> cos(0) = scale;
+    # sliced off below. Padded d rows/cols are zero on both operands.
+    php = _pad_to(phase.astype(jnp.float32)[None, :], 1, block_m)
+    xp = _tile_cast(xp, compute_dtype)
+    wp = _tile_cast(wp, compute_dtype)
+    out = _fmap.rff_features_pallas(xp, wp, php, scale=scale,
+                                    block_n=block_n, block_m=block_m,
+                                    block_d=block_d, interpret=interpret)
+    return out[:n, :k]
+
+
+def rff_features(x: jax.Array, omega: jax.Array, phase: jax.Array, *,
+                 scale: float, block_n: int | None = None,
+                 block_m: int | None = None, block_d: int | None = None,
+                 compute_dtype: str = "fp32",
+                 interpret: bool | None = None) -> jax.Array:
+    """Fused RFF transform ``scale * cos(x @ omega + phase)``: (n, k)
+    float32 feature block (``repro.core.approx.RFFMap``'s TPU path).
+    Block sizes left as ``None`` resolve through the autotune cache."""
+    _check_compute_dtype(compute_dtype)
+    if interpret is None:
+        interpret = _auto_interpret()
+    blocks = autotune.resolve_blocks(
+        "rff_features", (x.shape[0], omega.shape[1], x.shape[1]),
+        compute_dtype,
+        {"block_n": block_n, "block_m": block_m, "block_d": block_d})
+    return _rff_features_padded(x, omega, phase, scale=float(scale),
+                                compute_dtype=compute_dtype,
+                                interpret=interpret, **blocks)
+
+
 # ------------------------------------------------------------- kkt_select
 @partial(jax.jit, static_argnames=("c", "block", "interpret"))
 def _kkt_select_padded(f, alpha, y, mask, *, c, block, interpret):

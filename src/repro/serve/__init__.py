@@ -10,7 +10,8 @@
 See ``serve.artifact`` for the artifact schema and ``serve.predictor``
 for the bucket/jit-cache behavior.
 """
-from repro.serve.artifact import (PackedModel, TaskBucket,  # noqa: F401
-                                  SCHEMA_NAME, SCHEMA_VERSION, load, pack,
-                                  save)
+from repro.serve.artifact import (LowRankMap, PackedModel,  # noqa: F401
+                                  TaskBucket, SCHEMA_NAME, SCHEMA_VERSION,
+                                  SCHEMA_VERSION_CLASSIC, SCHEMA_VERSIONS,
+                                  load, pack, save)
 from repro.serve.predictor import Predictor, serving_config  # noqa: F401

@@ -10,10 +10,19 @@ else. Buckets group tasks of similar SV count (the training-side pow2
 compaction), so each bucket is one fused decide program at its own
 width.
 
+Low-rank fits (``engine="nystrom"|"rff"``) pack to a much smaller
+artifact: instead of SV banks, the feature-map arrays (landmarks+proj
+or omega+phase, as a ``LowRankMap``) plus the stacked linear weights
+``linear_w (n_tasks, rank)`` / ``linear_b (n_tasks,)`` — serving is one
+feature transform and a matmul, independent of the training-set size.
+
 Artifacts serialize to a versioned ``.npz`` schema (``save``/``load``):
 one JSON metadata entry (schema name + version, kind, kernel params,
-strategy/decision) and flat numeric arrays ``b{i}_<field>`` per bucket.
-``load`` refuses unknown schema names/versions instead of guessing.
+strategy/decision) and flat numeric arrays ``b{i}_<field>`` per bucket
+(or ``fm_a``/``fm_b``/``linear_w``/``linear_b`` for low-rank). Classic
+SV-bank models still write version 1 — old readers keep working — and
+low-rank models write version 2; ``load`` refuses unknown schema
+names/versions instead of guessing.
 
 ``pack`` accepts a fitted ``SVC`` (binary or multiclass) or ``SVR`` and
 is duck-typed on the fitted attributes, so this module never imports
@@ -31,7 +40,9 @@ import numpy as np
 from repro.core import kernels as K
 
 SCHEMA_NAME = "repro.svm-pack"
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2                  # current writer for low-rank packs
+SCHEMA_VERSION_CLASSIC = 1          # SV-bank packs stay readable by old code
+SCHEMA_VERSIONS = (1, 2)            # what load() accepts
 
 
 class TaskBucket(NamedTuple):
@@ -51,6 +62,19 @@ class TaskBucket(NamedTuple):
     @property
     def width(self) -> int:
         return self.sv_x.shape[1]
+
+
+class LowRankMap(NamedTuple):
+    """Serialized feature map of a low-rank fit (``repro.core.approx``).
+
+    kind "nystrom": ``a`` = landmarks (k, d), ``b`` = proj (k, rank).
+    kind "rff":     ``a`` = omega (d, rank),  ``b`` = phase (rank,).
+    Rebuild with ``approx.map_from_arrays(kind, kernel, a, b)``.
+    """
+
+    kind: str
+    a: np.ndarray
+    b: np.ndarray
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,8 +97,25 @@ class PackedModel:
     decision: str = "vote"
     classes: Optional[np.ndarray] = None
     pairs: Optional[np.ndarray] = None
+    feature_map: Optional[LowRankMap] = None
+    linear_w: Optional[np.ndarray] = None   # (n_tasks, rank)
+    linear_b: Optional[np.ndarray] = None   # (n_tasks,)
 
     def __post_init__(self):
+        if self.feature_map is not None:
+            if self.buckets:
+                raise ValueError("a low-rank pack carries linear weights, "
+                                 "not SV buckets; got both")
+            if self.linear_w is None or self.linear_b is None:
+                raise ValueError("a low-rank pack needs linear_w and "
+                                 "linear_b alongside its feature_map")
+            if (self.linear_w.shape[0] != self.n_tasks
+                    or self.linear_b.shape != (self.n_tasks,)):
+                raise ValueError(
+                    f"linear weights must stack all {self.n_tasks} tasks: "
+                    f"linear_w {self.linear_w.shape}, "
+                    f"linear_b {self.linear_b.shape}")
+            return
         ids = np.sort(np.concatenate([g.task_ids for g in self.buckets]))
         if not np.array_equal(ids, np.arange(self.n_tasks)):
             raise ValueError(
@@ -138,10 +179,47 @@ def _pack_svr(reg) -> PackedModel:
         strategy="svr")
 
 
+def _pack_lowrank(model) -> PackedModel:
+    """Low-rank (Nyström/RFF) fits: feature-map arrays + stacked linear
+    weights instead of SV banks — artifact size is O(rank), independent
+    of the training-set size."""
+    fmap = model._feature_map
+    a, b = fmap.arrays
+    fm = LowRankMap(kind=fmap.kind, a=np.asarray(a, np.float32),
+                    b=np.asarray(b, np.float32))
+    if hasattr(model, "beta_"):
+        kind, strategy, decision = "svr", "svr", "vote"
+        w, bias = model.w_[None], np.array([model.b_], np.float32)
+        classes = pairs = None
+        n_tasks = 1
+    elif model._binary:
+        kind, strategy, decision = "svc", "binary", model.decision
+        w, bias = model.w_[None], np.array([model.b_], np.float32)
+        classes = np.asarray(model.classes_)
+        pairs = np.array([[1, 0]], np.int64)
+        n_tasks = 1
+    else:
+        taskset = model._taskset
+        kind, strategy, decision = "svc", taskset.strategy, model.decision
+        w, bias = model.task_w_, model.task_b_
+        classes = np.asarray(model.classes_)
+        pairs = np.asarray(taskset.pairs, np.int64)
+        n_tasks = taskset.n_tasks
+    return PackedModel(
+        kind=kind, kernel=model.kernel_params,
+        n_features=fmap.n_features, n_tasks=n_tasks, buckets=(),
+        strategy=strategy, decision=decision, classes=classes,
+        pairs=pairs, feature_map=fm,
+        linear_w=np.asarray(w, np.float32),
+        linear_b=np.asarray(bias, np.float32))
+
+
 def pack(model) -> PackedModel:
     """Compact a fitted ``SVC``/``SVR`` into an immutable PackedModel."""
     if not getattr(model, "_fitted", False):
         raise ValueError("pack() needs a fitted model (call .fit first)")
+    if getattr(model, "_feature_map", None) is not None:
+        return _pack_lowrank(model)
     if hasattr(model, "beta_"):
         return _pack_svr(model)
     if model._binary:
@@ -157,19 +235,30 @@ def save(path, model: PackedModel) -> None:
     silently appends ".npz" to extension-less paths, so a
     ``save(p)`` / ``load(p)`` round-trip always works.
     """
+    lowrank = model.feature_map is not None
     meta = {
-        "schema": SCHEMA_NAME, "version": SCHEMA_VERSION,
+        "schema": SCHEMA_NAME,
+        # classic SV-bank packs keep writing version 1 so pre-low-rank
+        # readers stay compatible; only low-rank packs need version 2
+        "version": SCHEMA_VERSION if lowrank else SCHEMA_VERSION_CLASSIC,
         "kind": model.kind, "strategy": model.strategy,
         "decision": model.decision,
         "kernel": dataclasses.asdict(model.kernel),
         "n_features": model.n_features, "n_tasks": model.n_tasks,
         "n_buckets": len(model.buckets),
     }
+    if lowrank:
+        meta["feature_map"] = model.feature_map.kind
     arrays = {"meta": np.array(json.dumps(meta, sort_keys=True))}
     if model.classes is not None:
         arrays["classes"] = model.classes
     if model.pairs is not None:
         arrays["pairs"] = model.pairs
+    if lowrank:
+        arrays["fm_a"] = model.feature_map.a
+        arrays["fm_b"] = model.feature_map.b
+        arrays["linear_w"] = model.linear_w
+        arrays["linear_b"] = model.linear_b
     for i, g in enumerate(model.buckets):
         for field, value in g._asdict().items():
             arrays[f"b{i}_{field}"] = value
@@ -187,13 +276,20 @@ def load(path) -> PackedModel:
         if meta.get("schema") != SCHEMA_NAME:
             raise ValueError(f"not a {SCHEMA_NAME} artifact: "
                              f"schema={meta.get('schema')!r}")
-        if meta.get("version") != SCHEMA_VERSION:
+        if meta.get("version") not in SCHEMA_VERSIONS:
             raise ValueError(
                 f"unsupported {SCHEMA_NAME} version {meta.get('version')!r}"
-                f" (this build reads version {SCHEMA_VERSION})")
+                f" (this build reads versions {list(SCHEMA_VERSIONS)})")
         buckets = tuple(
             TaskBucket(**{f: z[f"b{i}_{f}"] for f in TaskBucket._fields})
             for i in range(meta["n_buckets"]))
+        fm = w = lb = None
+        if "feature_map" in meta:
+            fm = LowRankMap(kind=meta["feature_map"],
+                            a=np.asarray(z["fm_a"], np.float32),
+                            b=np.asarray(z["fm_b"], np.float32))
+            w = np.asarray(z["linear_w"], np.float32)
+            lb = np.asarray(z["linear_b"], np.float32)
         return PackedModel(
             kind=meta["kind"], kernel=K.KernelParams(**meta["kernel"]),
             n_features=meta["n_features"], n_tasks=meta["n_tasks"],
@@ -201,4 +297,4 @@ def load(path) -> PackedModel:
             decision=meta["decision"],
             classes=z["classes"] if "classes" in z else None,
             pairs=np.asarray(z["pairs"], np.int64) if "pairs" in z
-            else None)
+            else None, feature_map=fm, linear_w=w, linear_b=lb)

@@ -24,6 +24,12 @@ padded SV rows carry ``coef == 0``, so padding never changes a served
 value. Width-0 banks (the empty-SV degenerate model) serve the constant
 bias, matching the training-side behavior.
 
+Low-rank packs (``PackedModel.feature_map`` set) skip the SV-bank
+machinery entirely: the feature-map arrays and the stacked linear
+weights stay resident, and every batch is one jitted transform +
+(rank, n_tasks) matmul — serving cost is independent of the
+training-set size.
+
     pred = Predictor(serve.pack(clf), engine="pallas")
     pred.predict(Z)                   # class labels / SVR values
     pred.decision_function(Z)         # margins, sklearn orientation
@@ -70,6 +76,24 @@ class Predictor:
             (jnp.asarray(g.sv_x), jnp.asarray(g.sv_coef),
              jnp.asarray(g.b), np.asarray(g.task_ids))
             for g in model.buckets)
+        if model.feature_map is not None:
+            # low-rank pack: resident map arrays + stacked linear
+            # weights; one jitted transform+matmul program per batch
+            # bucket, no SV bank at all
+            fm = model.feature_map
+            self._fm_arrays = (jnp.asarray(fm.a), jnp.asarray(fm.b))
+            self._linear = (jnp.asarray(model.linear_w),
+                            jnp.asarray(model.linear_b))
+            kind, kp = fm.kind, model.kernel
+            gram_dtype = self.engine_cfg.gram_dtype
+
+            def lowrank_decide(a, b, w, lb, z):
+                from repro.core import approx
+                m = approx.map_from_arrays(kind, kp, a, b,
+                                           gram_dtype=gram_dtype)
+                return (m.transform(z) @ w.T).T + lb[:, None]
+
+            self._decide_lowrank = jax.jit(lowrank_decide)
         # one jitted callable; XLA caches one executable per distinct
         # (bucket shape, batch bucket) argument signature
         self._decide = jax.jit(self._decide_stack)
@@ -128,6 +152,12 @@ class Predictor:
             zp = np.zeros((bucket, xt.shape[1]), np.float32)
             zp[:stop - start] = xt[start:stop]
             zj = jnp.asarray(zp)
+            if self.model.feature_map is not None:
+                a, fb = self._fm_arrays
+                w, lb = self._linear
+                df = self._decide_lowrank(a, fb, w, lb, zj)
+                out[:, start:stop] = np.asarray(df)[:, :stop - start]
+                continue
             for sv_x, sv_coef, b, task_ids in self._banks:
                 if sv_x.shape[1] == 0:  # empty-SV bank: constant bias
                     out[task_ids, start:stop] = np.asarray(b)[:, None]

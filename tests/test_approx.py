@@ -1,0 +1,397 @@
+"""Approximate-kernel tier: Nyström / RFF feature maps, the low-rank
+engine, the linear DCD path through SVC/SVR, and low-rank serving.
+
+The load-bearing identities:
+
+* Nyström with landmarks == all points reproduces the EXACT Gram
+  (``K K^+ K = K``), so the approximation limit is testable exactly —
+  including running the unchanged exact SMO over the low-rank engine
+  and recovering the dense-engine solution.
+* RFF Gram error is O(1/sqrt(rank)) Monte-Carlo: it must shrink as the
+  feature count grows (hypothesis property over seeds).
+* The fused Pallas feature-map kernel is bit-compatible with the jnp
+  reference (fp32) across non-block-divisible shapes.
+* Low-rank fits never materialize an (n, n) object — the slow-marked
+  bounded-memory case pins that at n = 131072.
+"""
+import io
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import approx, kernel_engine as KE, kernels as K, linear
+from repro.core import smo
+from repro.core.svm import SVC, SVR
+from repro.data import make_blobs, make_synth_regression, normalize
+from repro import serve
+from repro.kernels import ops
+
+
+def _rbf(x, seed=0, gamma=-1.0):
+    kp = K.KernelParams(name="rbf", gamma=gamma)
+    return K.resolve_gamma(kp, jnp.asarray(x))
+
+
+def _blob_problem(n=240, d=6, seed=0):
+    x, y = make_blobs(n // 2, 2, d, sep=3.0, seed=seed)
+    return normalize(x), y
+
+
+# ------------------------------------------------------ approximation limit
+def test_nystrom_full_rank_reproduces_exact_gram():
+    """landmarks == all points => Phi Phi^T == K up to the spectral clip."""
+    x, _ = _blob_problem(160)
+    kp = _rbf(x)
+    cfg = KE.EngineConfig(backend="nystrom", rank=160)
+    fmap = approx.make_feature_map(jnp.asarray(x), kp, cfg)
+    exact = K.make_gram_fn(kp)(jnp.asarray(x), jnp.asarray(x))
+    phi = fmap.transform(jnp.asarray(x))
+    err = float(jnp.max(jnp.abs(phi @ phi.T - exact)))
+    assert err < 1e-4, err
+
+
+def test_exact_smo_over_lowrank_engine_matches_dense_at_full_rank():
+    """The unchanged exact SMO, run against the full-rank Nyström engine,
+    must recover the dense-engine alphas (same QP up to the clip)."""
+    x, y = _blob_problem(120)
+    yy = jnp.asarray(np.where(y == 1, 1.0, -1.0).astype(np.float32))
+    kp = _rbf(x)
+    cfg = smo.SMOConfig(C=1.0, tol=1e-3)
+    r_dense = smo.binary_smo(jnp.asarray(x), yy, cfg=cfg, kernel=kp,
+                             engine=KE.EngineConfig(backend="dense"))
+    r_low = smo.binary_smo(jnp.asarray(x), yy, cfg=cfg, kernel=kp,
+                           engine=KE.EngineConfig(backend="nystrom",
+                                                  rank=120))
+    assert bool(r_low.converged)
+    np.testing.assert_allclose(np.asarray(r_low.alpha),
+                               np.asarray(r_dense.alpha), atol=5e-3)
+    np.testing.assert_allclose(float(r_low.b), float(r_dense.b),
+                               atol=5e-3)
+
+
+def test_rff_gram_error_shrinks_with_rank():
+    x, _ = _blob_problem(180)
+    kp = _rbf(x)
+    exact = np.asarray(K.make_gram_fn(kp)(jnp.asarray(x), jnp.asarray(x)))
+    errs = []
+    for rank in (32, 256, 2048):
+        cfg = KE.EngineConfig(backend="rff", rank=rank, seed=3)
+        phi = approx.make_feature_map(jnp.asarray(x), kp,
+                                      cfg).transform(jnp.asarray(x))
+        errs.append(float(np.mean(np.abs(np.asarray(phi @ phi.T)
+                                         - exact))))
+    assert errs[0] > errs[1] > errs[2], errs
+    assert errs[2] < 0.02, errs
+
+
+def test_rff_rejects_non_rbf():
+    x, _ = _blob_problem(40)
+    kp = K.KernelParams(name="linear")
+    cfg = KE.EngineConfig(backend="rff", rank=16)
+    with pytest.raises(ValueError, match="rff.*[Rr][Bb][Ff]"):
+        approx.make_feature_map(jnp.asarray(x), kp, cfg)
+
+
+# ------------------------------------------------------------- landmarks
+@pytest.mark.parametrize("method", approx.LANDMARK_METHODS)
+def test_select_landmarks_valid(method):
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(200, 4)).astype(np.float32))
+    idx = approx.select_landmarks(x, 32, method, jax.random.PRNGKey(0))
+    idx = np.asarray(idx)
+    assert idx.shape == (32,)
+    assert ((idx >= 0) & (idx < 200)).all()
+    if method == "uniform":   # permutation-based: no duplicates
+        assert len(np.unique(idx)) == 32
+
+
+def test_kmeanspp_spreads_over_clusters():
+    """D^2 seeding must hit every well-separated cluster at least once
+    (uniform can miss one; that's the point of the method)."""
+    x, y = make_blobs(50, 4, 3, sep=12.0, seed=1)
+    idx = np.asarray(approx.select_landmarks(
+        jnp.asarray(x), 8, "kmeans++", jax.random.PRNGKey(2)))
+    assert len(set(y[idx])) == 4
+
+
+def test_unknown_landmark_method_raises():
+    x = jnp.zeros((10, 2), jnp.float32)
+    with pytest.raises(ValueError, match="landmark"):
+        approx.select_landmarks(x, 4, "grid", jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------ fused Pallas kernel
+@pytest.mark.parametrize("shape", [(128, 128, 128), (200, 77, 13),
+                                   (5, 300, 257)])
+def test_rff_features_pallas_matches_jnp(shape):
+    n, k, d = shape
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    om = jnp.asarray(rng.normal(size=(d, k)).astype(np.float32))
+    ph = jnp.asarray(rng.uniform(0, 2 * np.pi, size=k).astype(np.float32))
+    scale = float(np.sqrt(2.0 / k))
+    ref = scale * jnp.cos(x @ om + ph)
+    got = ops.rff_features(x, om, ph, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-5)
+    got16 = ops.rff_features(x, om, ph, scale=scale, compute_dtype="bf16")
+    np.testing.assert_allclose(np.asarray(got16), np.asarray(ref),
+                               atol=5e-2)
+
+
+def test_rffmap_fused_flag_parity():
+    x, _ = _blob_problem(96)
+    kp = _rbf(x)
+    cfg = KE.EngineConfig(backend="rff", rank=64, seed=0)
+    fmap = approx.make_feature_map(jnp.asarray(x), kp, cfg)
+    plain = np.asarray(fmap.transform(jnp.asarray(x)))
+    fmap.fused = True   # force the Pallas path (interpreter on CPU)
+    fused = np.asarray(fmap.transform(jnp.asarray(x)))
+    np.testing.assert_allclose(fused, plain, atol=1e-5)
+
+
+# ------------------------------------------------------------ engine facade
+def test_make_engine_lowrank_backend():
+    x, _ = _blob_problem(80)
+    kp = _rbf(x)
+    eng = KE.make_engine(jnp.asarray(x), kp,
+                         KE.EngineConfig(backend="nystrom", rank=24))
+    assert isinstance(eng, approx.LowRankKernelEngine)
+    assert eng.rank == 24
+    row = np.asarray(eng.row(3)[0])
+    blk = np.asarray(eng.block(jnp.arange(5), jnp.arange(80)))
+    np.testing.assert_allclose(blk[3], row[:80], atol=1e-5)
+    v = jnp.ones((80,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(eng.matvec(v)),
+                               np.asarray(eng.full() @ v), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_lowrank_full_respects_dense_limit():
+    x = jnp.zeros((64, 3), jnp.float32)
+    kp = K.KernelParams(name="rbf", gamma=0.5)
+    eng = KE.make_engine(x, kp, KE.EngineConfig(backend="rff", rank=8,
+                                                dense_limit=32))
+    with pytest.raises(RuntimeError, match="dense_limit"):
+        eng.full()
+
+
+def test_unknown_backend_error_lists_lowrank():
+    with pytest.raises(ValueError, match="nystrom"):
+        KE.make_engine(jnp.zeros((4, 2), jnp.float32),
+                       K.KernelParams(name="rbf", gamma=0.5),
+                       KE.EngineConfig(backend="bogus"))
+
+
+# ------------------------------------------------------------- model paths
+@pytest.mark.parametrize("engine", ["nystrom", "rff"])
+def test_svc_lowrank_matches_exact_accuracy(engine):
+    x, y = _blob_problem(400, seed=5)
+    xtr, ytr, xte, yte = x[:300], y[:300], x[300:], y[300:]
+    exact = SVC(engine="dense").fit(xtr, ytr)
+    clf = SVC(engine=engine, rank=128).fit(xtr, ytr)
+    assert clf.converged_
+    acc_e = exact.score(xte, yte)
+    acc_a = float(np.mean(
+        clf.classes_[(clf._decision_function_engine(xte) > 0)
+                     .astype(np.int64)] == yte))
+    assert acc_a >= acc_e - 0.02, (acc_a, acc_e)
+
+
+@pytest.mark.parametrize("engine", ["nystrom", "rff"])
+def test_svr_lowrank_close_to_exact(engine):
+    x, y = make_synth_regression(300, 4, kind="sinc", noise=0.05, seed=3)
+    reg_e = SVR(engine="dense", epsilon=0.1).fit(x[:220], y[:220])
+    reg_a = SVR(engine=engine, rank=128, epsilon=0.1).fit(x[:220], y[:220])
+    mse_e = float(np.mean((reg_e._predict_engine(x[220:]) - y[220:]) ** 2))
+    mse_a = float(np.mean((reg_a._predict_engine(x[220:]) - y[220:]) ** 2))
+    assert mse_a <= mse_e + 0.05, (mse_a, mse_e)
+
+
+def test_svc_multiclass_lowrank():
+    x, y = make_blobs(80, 4, 5, sep=4.0, seed=2)
+    x = normalize(x)
+    clf = SVC(engine="nystrom", rank=96).fit(x[:240], y[:240])
+    assert clf.task_w_.shape == (6, clf._feature_map.rank)  # ovo: C(4,2)
+    assert clf.n_support_.shape == (6,)
+    acc = clf.score(x[240:], y[240:])
+    assert acc >= 0.9, acc
+
+
+def test_lowrank_fit_deterministic():
+    x, y = _blob_problem(200, seed=7)
+    a = SVC(engine="rff", rank=64, seed=11).fit(x, y)
+    b = SVC(engine="rff", rank=64, seed=11).fit(x, y)
+    assert np.array_equal(a.alpha_, b.alpha_)
+    assert np.array_equal(a.w_, b.w_)
+    c = SVC(engine="rff", rank=64, seed=12).fit(x, y)
+    assert not np.array_equal(a.w_, c.w_)   # seed actually matters
+
+
+def test_exact_engines_unchanged_by_lowrank_kwargs():
+    """rank/landmarks/seed must be inert for classic backends — the
+    pre-approx fit stays bit-identical."""
+    x, y = _blob_problem(150, seed=4)
+    base = SVC(engine="dense").fit(x, y)
+    knob = SVC(engine="dense", rank=17, landmarks="kmeans++",
+               seed=99).fit(x, y)
+    assert np.array_equal(base.alpha_, knob.alpha_)
+    assert base.b_ == knob.b_
+
+
+# ---------------------------------------------------------------- serving
+@pytest.mark.parametrize("engine", ["nystrom", "rff"])
+def test_lowrank_serving_roundtrip(engine):
+    x, y = _blob_problem(300, seed=6)
+    clf = SVC(engine=engine, rank=64).fit(x[:220], y[:220])
+    ref = clf._decision_function_engine(x[220:])
+    np.testing.assert_allclose(clf.decision_function(x[220:]), ref,
+                               atol=1e-5)
+    packed = serve.pack(clf)
+    assert packed.feature_map is not None
+    assert packed.buckets == ()
+    assert packed.linear_w.shape == (1, 64)
+    buf = io.BytesIO()
+    serve.save(buf, packed)
+    buf.seek(0)
+    loaded = serve.load(buf)
+    assert loaded.feature_map.kind == engine
+    pred = serve.Predictor(loaded)
+    np.testing.assert_allclose(pred.decision_function(x[220:]), ref,
+                               atol=1e-5)
+    assert (pred.predict(x[220:]) == clf.predict(x[220:])).all()
+
+
+def test_lowrank_svr_serving_roundtrip(tmp_path):
+    x, y = make_synth_regression(260, 4, kind="sinc", noise=0.05, seed=8)
+    reg = SVR(engine="nystrom", rank=48, epsilon=0.1).fit(x[:200], y[:200])
+    ref = reg._predict_engine(x[200:])
+    path = tmp_path / "lowrank.npz"
+    serve.save(path, serve.pack(reg))
+    pred = serve.Predictor(serve.load(path))
+    np.testing.assert_allclose(pred.predict(x[200:]), ref, atol=1e-5)
+
+
+def test_lowrank_multiclass_serving_matches_engine():
+    x, y = make_blobs(70, 3, 5, sep=4.0, seed=3)
+    x = normalize(x)
+    clf = SVC(engine="rff", rank=96).fit(x[:150], y[:150])
+    ref = clf._decision_function_engine(x[150:])
+    buf = io.BytesIO()
+    serve.save(buf, serve.pack(clf))
+    buf.seek(0)
+    pred = serve.Predictor(serve.load(buf))
+    np.testing.assert_allclose(pred.decision_function(x[150:]), ref,
+                               atol=1e-5)
+    assert (pred.predict(x[150:]) == clf.predict(x[150:])).all()
+
+
+def test_classic_pack_still_writes_version_1():
+    import json
+    x, y = _blob_problem(100)
+    clf = SVC(engine="dense").fit(x, y)
+    buf = io.BytesIO()
+    serve.save(buf, serve.pack(clf))
+    buf.seek(0)
+    with np.load(buf) as z:
+        meta = json.loads(str(z["meta"]))
+    assert meta["version"] == 1
+    assert "feature_map" not in meta
+
+
+def test_lowrank_pack_validation():
+    fm = serve.LowRankMap(kind="rff", a=np.zeros((3, 4), np.float32),
+                          b=np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="linear_w"):
+        serve.PackedModel(kind="svc",
+                          kernel=K.KernelParams(name="rbf", gamma=0.5),
+                          n_features=3, n_tasks=1, buckets=(),
+                          feature_map=fm)
+
+
+# ------------------------------------------------------------ linear solver
+def test_dcd_matches_smo_on_explicit_features():
+    """On the SAME low-rank kernel, the DCD optimum and the exact-SMO
+    optimum agree (two solvers, one QP)."""
+    x, y = _blob_problem(140, seed=9)
+    yy = np.where(y == 1, 1.0, -1.0).astype(np.float32)
+    kp = _rbf(x)
+    cfg = KE.EngineConfig(backend="nystrom", rank=64)
+    fmap = approx.make_feature_map(jnp.asarray(x), kp, cfg)
+    phi = fmap.transform(jnp.asarray(x))
+    r = linear.linear_svc(phi, jnp.asarray(yy),
+                          cfg=linear.DCDConfig(C=1.0, tol=1e-4))
+    assert bool(r.converged)
+    # SMO solves the SAME QP but with an equality constraint / free bias;
+    # decisions (not raw alphas) are the comparable quantity
+    r_smo = smo.binary_smo(jnp.asarray(x), jnp.asarray(yy),
+                           cfg=smo.SMOConfig(C=1.0, tol=1e-4), kernel=kp,
+                           engine=cfg)
+    df_dcd = np.asarray(phi @ r.w + r.b)
+    df_smo = np.asarray(
+        phi @ (phi.T @ (jnp.asarray(yy) * r_smo.alpha)) + r_smo.b)
+    agree = np.mean((df_dcd > 0) == (df_smo > 0))
+    assert agree >= 0.98, agree
+
+
+def test_dcd_mask_freezes_coordinates():
+    rng = np.random.default_rng(0)
+    phi = jnp.asarray(rng.normal(size=(60, 8)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=60)).astype(np.float32))
+    mask = np.ones(60, bool)
+    mask[40:] = False
+    r = linear.linear_svc(phi, y, cfg=linear.DCDConfig(),
+                          mask=jnp.asarray(mask))
+    assert np.all(np.asarray(r.alpha)[40:] == 0.0)
+
+
+# ------------------------------------------------------- hypothesis property
+def test_rff_error_property():
+    pytest.importorskip(
+        "hypothesis",
+        reason="optional dev dependency (see requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    x, _ = _blob_problem(100)
+    kp = _rbf(x)
+    exact = np.asarray(K.make_gram_fn(kp)(jnp.asarray(x),
+                                          jnp.asarray(x)))
+
+    @settings(deadline=None, max_examples=8)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 16))
+    def check(seed):
+        errs = []
+        for rank in (16, 1024):
+            cfg = KE.EngineConfig(backend="rff", rank=rank, seed=seed)
+            phi = approx.make_feature_map(
+                jnp.asarray(x), kp, cfg).transform(jnp.asarray(x))
+            errs.append(float(np.mean(np.abs(np.asarray(phi @ phi.T)
+                                             - exact))))
+        # 64x more features => ~8x lower MC error; demand at least 2x
+        assert errs[1] < errs[0] / 2, (seed, errs)
+
+    check()
+
+
+# ------------------------------------------------------------ bounded memory
+@pytest.mark.slow
+def test_lowrank_large_n_bounded_memory():
+    """n = 131072 trains under both approx engines with O(n * rank)
+    state — the dense Gram would be 64 GiB. Epochs are capped (this is
+    a feasibility pin, not a convergence test); accuracy on blobs must
+    still beat a coin flip by a wide margin."""
+    n = 131072
+    x, y = make_blobs(n // 2, 2, 8, sep=4.0, seed=7)
+    x = normalize(x)
+    for engine in ("nystrom", "rff"):
+        clf = SVC(engine=engine, rank=64)
+        clf.dcd_cfg = linear.DCDConfig(C=1.0, tol=1e-3, max_epochs=3)
+        clf.fit(x, y)
+        assert clf._feature_map.rank == 64
+        assert clf.alpha_.shape == (n,)
+        acc = float(np.mean(
+            clf.classes_[(clf._decision_function_engine(x[:4096]) > 0)
+                         .astype(np.int64)] == y[:4096]))
+        assert acc >= 0.75, (engine, acc)

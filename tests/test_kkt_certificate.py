@@ -10,7 +10,13 @@ equality multiplier — is within the solver's tolerance. A solve that
 terminated at duality gap <= 2*tol certifies at <= tol.
 
 Covered: SVC (binary) and SVR across the full engine matrix
-{dense, chunked, pallas, sharded} through the public class API.
+{dense, chunked, pallas, sharded} through the public class API, plus
+the low-rank tier ({nystrom, rff}): there the certificate is computed
+against the APPROXIMATE Gram ``K-tilde = PhiBar PhiBar^T`` (PhiBar is
+the feature matrix with the augmented bias column) with the equality
+multiplier pinned at ``r = 0`` — the augmented-bias dual has no
+equality constraint, so its optimum must certify at exactly r = 0
+(``smo.kkt_violation``'s pinned-r mode).
 """
 import numpy as np
 import jax.numpy as jnp
@@ -55,6 +61,41 @@ def _svr_violation(reg: SVR, x, y) -> float:
     return float(smo.kkt_violation(a2, s, f, 0.0, reg.smo_cfg.C))
 
 
+LOWRANK = ["nystrom", "rff"]
+
+
+def _phibar(model, x) -> np.ndarray:
+    """Feature matrix with the augmented bias column — the linear DCD's
+    effective kernel is ``PhiBar PhiBar^T``."""
+    phi = np.asarray(model._feature_map.transform(jnp.asarray(x)),
+                     np.float64)
+    bias = np.full((phi.shape[0], 1), model.dcd_cfg.bias, np.float64)
+    return np.concatenate([phi, bias], axis=1)
+
+
+def _svc_violation_lowrank(clf: SVC, x, y) -> float:
+    """Certify the DCD alpha against the approximate Gram, multiplier
+    pinned at r = 0 (no equality constraint in the augmented dual)."""
+    yy = np.where(y == clf.classes_[1], 1.0, -1.0).astype(np.float64)
+    phib = _phibar(clf, x)
+    alpha = np.asarray(clf.alpha_, np.float64)
+    f = phib @ (phib.T @ (alpha * yy)) - yy   # y * p == -y at p = -1
+    return float(smo.kkt_violation(alpha, yy, f, 0.0, clf.smo_cfg.C,
+                                   r=0.0))
+
+
+def _svr_violation_lowrank(reg: SVR, x, y) -> float:
+    """Doubled epsilon-SVR spec over the approximate Gram, r pinned."""
+    phib = _phibar(reg, x)
+    phib2 = np.concatenate([phib, phib], axis=0)
+    n = x.shape[0]
+    s = np.r_[np.ones(n), -np.ones(n)]
+    p = np.r_[reg.epsilon - y, reg.epsilon + y].astype(np.float64)
+    a2 = np.asarray(reg.alpha_raw_, np.float64)
+    f = phib2 @ (phib2.T @ (a2 * s)) + s * p
+    return float(smo.kkt_violation(a2, s, f, 0.0, reg.smo_cfg.C, r=0.0))
+
+
 def _engine_kwargs(backend):
     if backend == "sharded":
         return dict(mesh=make_shard_mesh(4), worker_axes=("shards",),
@@ -84,6 +125,44 @@ def test_svr_kkt_certificate(backend):
     assert viol <= reg.smo_cfg.tol, (
         f"engine={backend}: max KKT violation {viol:.2e} exceeds "
         f"tol={reg.smo_cfg.tol}")
+
+
+@pytest.mark.parametrize("backend", LOWRANK)
+def test_svc_kkt_certificate_lowrank(backend):
+    x, yc = make_blobs(90, 2, 6, sep=1.2, seed=4)
+    x = normalize(x)
+    clf = SVC(kernel="rbf", C=1.0, engine=backend, rank=48).fit(x, yc)
+    assert clf.converged_
+    viol = _svc_violation_lowrank(clf, x, yc)
+    assert viol <= clf.smo_cfg.tol, (
+        f"engine={backend}: low-rank KKT violation {viol:.2e} exceeds "
+        f"tol={clf.smo_cfg.tol}")
+
+
+@pytest.mark.parametrize("backend", LOWRANK)
+def test_svr_kkt_certificate_lowrank(backend):
+    x, y = make_synth_regression(120, 4, kind="sinc", noise=0.05, seed=2)
+    reg = SVR(kernel="rbf", C=1.0, epsilon=0.1, engine=backend,
+              rank=48).fit(x, y)
+    assert reg.converged_
+    viol = _svr_violation_lowrank(reg, x, y)
+    assert viol <= reg.smo_cfg.tol, (
+        f"engine={backend}: low-rank KKT violation {viol:.2e} exceeds "
+        f"tol={reg.smo_cfg.tol}")
+
+
+def test_lowrank_certificate_not_vacuous():
+    """Zeroed multipliers on a non-trivial low-rank problem must show a
+    violation far above tol — the r=0 pinned check has teeth."""
+    x, yc = make_blobs(60, 2, 6, sep=1.2, seed=9)
+    x = normalize(x)
+    clf = SVC(kernel="rbf", engine="nystrom", rank=32).fit(x, yc)
+    yy = np.where(yc == clf.classes_[1], 1.0, -1.0).astype(np.float64)
+    phib = _phibar(clf, x)
+    a0 = np.zeros(len(yy))
+    f0 = phib @ (phib.T @ (a0 * yy)) - yy
+    assert float(smo.kkt_violation(a0, yy, f0, 0.0, 1.0,
+                                   r=0.0)) > 10 * clf.smo_cfg.tol
 
 
 @pytest.mark.parametrize("shrink_every", [0, 2])

@@ -1,0 +1,105 @@
+"""Cascade SVM: wall clock / accuracy / certificate vs shard count.
+
+One fixed RBF binary problem solved by the hierarchical cascade
+(``SVC(shard="cascade")``) at shard counts {1, 2, 4, 8}, against the
+unsharded exact SMO baseline — one JSON line per point via
+``benchmarks.common.emit_json``:
+
+    {"bench": "cascade", "n": 4096, "shards": 4, "wall_s": ...,
+     "rounds": ..., "kkt": ..., "converged": ..., "n_sv": ...,
+     "acc": ..., "n_iter": ...}
+
+(the baseline line carries ``"shards": 0``). ``kkt`` is the float64
+full-dataset certificate the cascade terminates on — the point of the
+sweep is that it stays <= tol at every shard count while the leaf
+solves shrink to n/S. ``--quick`` is the CI parity smoke: small n, and
+every cascade point must CERTIFY (converged) and land within
+``QUICK_GATE`` of the unsharded accuracy.
+
+Run standalone:
+
+    PYTHONPATH=src python -m benchmarks.bench_cascade [--quick]
+
+or via the runner:
+
+    PYTHONPATH=src python -m benchmarks.run --only cascade [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+N = 4096
+N_QUICK = 512
+N_TEST = 512
+SHARDS = (1, 2, 4, 8)
+SHARDS_QUICK = (1, 2, 4)
+ROUNDS = 8
+QUICK_GATE = 0.02      # CI smoke: |acc_cascade - acc_exact| gate
+D = 8
+
+
+def _problem(n: int, seed: int = 7):
+    from repro.data import make_blobs, normalize
+    x, y = make_blobs((n + N_TEST) // 2, 2, D, sep=4.0, seed=seed)
+    x = normalize(x)   # make_blobs shuffles, so a tail split is iid
+    return (x[:n], y[:n]), (x[n:n + N_TEST], y[n:n + N_TEST])
+
+
+def _timed_fit(clf, x, y) -> float:
+    t0 = time.perf_counter()
+    clf.fit(x, y)
+    return time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> None:
+    from benchmarks.common import emit_json
+    from repro.core.svm import SVC
+
+    n = N_QUICK if quick else N
+    shard_counts = SHARDS_QUICK if quick else SHARDS
+    (xtr, ytr), (xte, yte) = _problem(n)
+
+    exact = SVC(kernel="rbf")
+    wall = _timed_fit(exact, xtr, ytr)
+    acc_exact = exact.score(xte, yte)
+    emit_json({
+        "bench": "cascade", "n": n, "shards": 0, "wall_s": round(wall, 3),
+        "rounds": 0, "kkt": None, "converged": bool(exact.converged_),
+        "n_iter": int(exact.n_iter_), "n_sv": int(exact.n_support_),
+        "acc": round(acc_exact, 4),
+    })
+
+    accs = {}
+    for s in shard_counts:
+        clf = SVC(kernel="rbf", shard="cascade", cascade_shards=s,
+                  cascade_rounds=ROUNDS)
+        wall = _timed_fit(clf, xtr, ytr)
+        acc = clf.score(xte, yte)
+        accs[s] = (acc, bool(clf.converged_))
+        emit_json({
+            "bench": "cascade", "n": n, "shards": s,
+            "wall_s": round(wall, 3),
+            "rounds": int(clf.cascade_rounds_),
+            "kkt": float(clf.cascade_kkt_),
+            "converged": bool(clf.converged_),
+            "n_iter": int(clf.n_iter_),
+            "n_sv": int(clf.n_support_),
+            "acc": round(acc, 4),
+        })
+
+    if quick:
+        # CI parity gate: every shard count must certify the global KKT
+        # conditions AND match the unsharded accuracy
+        for s, (acc, converged) in accs.items():
+            assert converged, f"cascade parity gate: S={s} did not certify"
+            assert acc >= acc_exact - QUICK_GATE, (
+                f"cascade parity gate: S={s} accuracy {acc:.4f} vs exact "
+                f"{acc_exact:.4f} (gate {QUICK_GATE})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

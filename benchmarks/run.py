@@ -33,6 +33,11 @@ machine-consumable trajectory successive commits diff):
                                       engine serving, requests/s at
                                       batch {1, 32, 256}, JSON lines;
                                       --only serving)
+  beyond-paper  -> bench_cascade     (hierarchical cascade training:
+                                      wall clock / accuracy / KKT
+                                      certificate vs shard count, JSON
+                                      lines; --only cascade — --quick
+                                      is the CI parity smoke)
   beyond-paper  -> tile_sweep        (autotuner tuned-vs-default tile
                                       configs for the Pallas kernels,
                                       JSON lines; part of the kernels
@@ -78,7 +83,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
                          "kernels; opt-in extras: large_n,approx,"
-                         "scheduler,sharded,svr,serving,tile_sweep")
+                         "scheduler,sharded,svr,serving,tile_sweep,"
+                         "cascade")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -133,6 +139,11 @@ def main(argv=None) -> None:
         # opt-in: the regression analog of the SMO-vs-GD comparison
         from benchmarks import bench_svr
         _run_suite("svr", lambda: bench_svr.main(quick=args.quick))
+    if only is not None and "cascade" in only:
+        # opt-in: cascade shard-solve-reduce scaling (CI smoke: --quick
+        # asserts the certificate + accuracy parity gate)
+        from benchmarks import bench_cascade
+        _run_suite("cascade", lambda: bench_cascade.main(quick=args.quick))
     if only is not None and "serving" in only:
         # opt-in: batched Predictor vs the per-call engine serving path
         from benchmarks import bench_serving

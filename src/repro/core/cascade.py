@@ -1,0 +1,640 @@
+"""Cascade SVM — hierarchical shard-solve-reduce training with a
+certified global KKT exit (Graf et al., *Parallel Support Vector
+Machines: The Cascade SVM*, NIPS 2004; the hierarchical tier the source
+paper's MPI layer stops short of).
+
+The data-parallel solver in ``repro.core.smo`` shards ONE QP's sample
+axis — every worker still touches every SMO iteration. The cascade is
+the orthogonal decomposition: partition the training set into S shards,
+solve each shard's sub-SVM INDEPENDENTLY, and combine by support-vector
+union up a binary reduction tree —
+
+    shard 0   shard 1   shard 2   shard 3        round r
+       \\        /          \\        /
+        SV-union            SV-union             level 1
+            \\                  /
+             `----- SV-union -'
+                     root                        level log2(S)
+
+— then close the loop: non-SVs discarded at a leaf can re-emerge as
+global SVs, so after the root solve the certificate is checked over the
+FULL dataset and, if it fails, the surviving global SV set is fed back
+into every shard for another round (each node warm-started from the
+previous solution). Termination is *certified*, never assumed: a round
+only declares convergence when ``smo.kkt_violation`` — recomputed from
+scratch in float64, the same harness convention the KKT-certificate
+tests pin — is <= tol over all n samples.
+
+Four variants share one driver (``_run_cascade``):
+
+* ``cascade_binary`` / ``cascade_svr`` — exact-kernel cascades. Leaves
+  and multi-node merge levels run through ``dist.fit_taskset`` (the
+  bucketed, optionally mesh-task-parallel vmapped machinery) with
+  per-task ``alpha0`` warm starts; single-node levels — including the
+  S = 1 degenerate cascade and every root — use a scalar jitted solve
+  whose jit body is identical to ``svm._jitted_binary_fit``'s, so a
+  one-shard cascade reproduces the unsharded solver bit for bit.
+  Because pair-update SMO preserves its equality constraint invariant,
+  every merged warm start is projected back onto ``sum_i y_i a_i = 0``
+  (``_repair_equality``) before it seeds a node.
+* ``cascade_dcd`` / ``cascade_dcd_svr`` — low-rank cascades over an
+  ALREADY-TRANSFORMED feature matrix Φ (one shared feature map for the
+  whole dataset — shards slice rows of Φ, they never refit landmarks).
+  Nodes are jitted ``linear.linear_svc/svr`` solves with beta warm
+  starts; the augmented-bias dual has no equality constraint, so no
+  repair is needed, and the certificate pins r = 0.
+
+Partitioning is deterministic round-robin (shard s owns rows
+``s::S``) — no RNG, and label-sorted inputs still give every shard a
+class mixture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import dist
+from repro.core import kernel_engine as KE
+from repro.core import kernels as K
+from repro.core import linear
+from repro.core import multiclass as MC
+from repro.core import smo
+
+# support threshold, relative to C (matches svm._sv_threshold; kept
+# local — svm imports this module, not the other way around)
+SV_EPS = 1e-8
+
+# rows per float64 certificate block: bounds the live cross-Gram slab to
+# CHUNK * n_sv floats regardless of n
+CERT_CHUNK = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Cascade topology + termination knobs.
+
+    shards: leaf count S (clamped to n); 1 degenerates to the plain
+            unsharded solve (bit-identical to it on the exact path).
+    rounds: max feedback rounds. Round 2+ re-solves every shard on
+            ``partition ∪ global SVs`` warm-started from the previous
+            solution; the loop exits early on certificate success or on
+            a fixed point (identical support set AND violation — more
+            rounds cannot make progress).
+    tol:    global certificate tolerance; None inherits the solver tol.
+    """
+
+    shards: int = 4
+    rounds: int = 8
+    tol: Optional[float] = None
+
+
+class CascadeResult(NamedTuple):
+    """Global solution + certificate trail of one cascade run."""
+
+    alpha: np.ndarray          # (n,) dual vector (per-sample beta for SVR)
+    b: float
+    n_iter: int                # solver iterations summed over all nodes
+    converged: bool            # final certified violation <= tol
+    kkt: float                 # final certified violation (f64 recompute)
+    rounds: int                # feedback rounds actually run
+    history: tuple             # per-round dicts: nodes, sv, kkt, n_iter
+    alpha_raw: Optional[np.ndarray] = None   # (2n,) [alpha; alpha*] (SVR)
+    w: Optional[np.ndarray] = None           # (k,) primal weights (low-rank)
+
+
+def partition_indices(n: int, shards: int) -> list[np.ndarray]:
+    """Deterministic round-robin partition: shard s owns rows ``s::S``.
+    Interleaving keeps every shard class-mixed even when the caller's
+    rows arrive sorted by label (the common dataset layout)."""
+    s = max(1, min(int(shards), int(n)))
+    return [np.arange(p, n, s, dtype=np.int64) for p in range(s)]
+
+
+def validate_cascade(solver: Optional[str],
+                     cascade: CascadeConfig) -> None:
+    """Fail fast on configurations the cascade cannot honor. ``solver``
+    is None on the low-rank path (which ignores the solver knob and
+    always runs DCD nodes)."""
+    if solver is not None and solver != "smo":
+        raise ValueError(
+            "shard='cascade' warm-starts sub-SVM solves and requires "
+            f"solver='smo' (got solver={solver!r})")
+    if cascade.shards < 1:
+        raise ValueError(f"cascade_shards must be >= 1 "
+                         f"(got {cascade.shards})")
+    if cascade.rounds < 1:
+        raise ValueError(f"cascade_rounds must be >= 1 "
+                         f"(got {cascade.rounds})")
+
+
+def _repair_equality(v: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Project a merged warm start back onto ``sum_i y_i v_i = 0`` by
+    draining entries toward 0, largest first, on the offending sign
+    side — every step stays inside the box (all boxes here contain 0 on
+    the side being drained) and touches the fewest coordinates. Host
+    float64: the residue being cancelled is itself a rounding-scale
+    quantity and f32 arithmetic would leave a remainder.
+
+    SVC passes v = alpha >= 0 with y the ±1 labels; SVR passes v = beta
+    (signed) with y = 1, which makes the constraint ``sum beta = 0``."""
+    v = np.asarray(v, np.float64).copy()
+    c = np.asarray(y, np.float64) * v
+    s = float(c.sum())
+    if s == 0.0:
+        return v.astype(np.float32)
+    sign = 1.0 if s > 0.0 else -1.0
+    excess = abs(s)
+    idx = np.where(c * sign > 0.0)[0]
+    for i in idx[np.argsort(-np.abs(v[idx]))]:
+        take = min(abs(v[i]), excess)
+        v[i] -= np.sign(v[i]) * take
+        excess -= take
+        if excess <= 0.0:
+            break
+    return v.astype(np.float32)
+
+
+class _NodeFit(NamedTuple):
+    """One solved cascade node (indices are GLOBAL row ids)."""
+
+    idx: np.ndarray            # (k,) int64 rows of the node's samples
+    alpha: np.ndarray          # (k,) per-sample dual (beta for SVR)
+    b: float
+    n_iter: int
+    converged: bool
+    raw: Optional[np.ndarray] = None   # (2k,) doubled [alpha; alpha*]
+    w: Optional[np.ndarray] = None     # (k_feat,) DCD primal weights
+
+
+# ------------------------------------------------------------- node solvers
+@lru_cache(maxsize=128)
+def _jitted_node_fit(kind: str, warm: bool, epsilon: float,
+                     cfg: smo.SMOConfig, kernel: K.KernelParams, ecfg):
+    """Scalar (single-node) jitted solves, cached per static config.
+
+    The cold "svc" variant's lambda body is the same expression
+    ``svm._jitted_binary_fit`` jits, so the S = 1 cascade replays the
+    exact unsharded trace (bit-identical alphas/b); warm variants add
+    only the alpha0 argument."""
+    if kind == "svc":
+        if warm:
+            return jax.jit(lambda xx, yv, a0: smo.binary_smo(
+                xx, yv, cfg=cfg, kernel=kernel, engine=ecfg, alpha0=a0))
+        return jax.jit(lambda xx, yv: smo.binary_smo(
+            xx, yv, cfg=cfg, kernel=kernel, engine=ecfg))
+    if warm:
+        return jax.jit(lambda xx, yv, a0: smo.svr_smo(
+            xx, yv, epsilon=epsilon, cfg=cfg, kernel=kernel, engine=ecfg,
+            alpha0=a0))
+    return jax.jit(lambda xx, yv: smo.svr_smo(
+        xx, yv, epsilon=epsilon, cfg=cfg, kernel=kernel, engine=ecfg))
+
+
+@lru_cache(maxsize=64)
+def _jitted_dcd(kind: str, warm: bool, epsilon: float, cfg: linear.DCDConfig):
+    """Jitted low-rank node solves. The cold "svc" variant matches
+    ``linear.fit_linear_svc``'s body (S = 1 bit-identity for the DCD
+    path); warm variants thread the beta warm start."""
+    if kind == "svc":
+        if warm:
+            return jax.jit(lambda ph, yv, a0: linear.linear_svc(
+                ph, yv, cfg=cfg, alpha0=a0))
+        return jax.jit(lambda ph, yv: linear.linear_svc(ph, yv, cfg=cfg))
+    if warm:
+        return jax.jit(lambda ph, yv, a0: linear.linear_svr(
+            ph, yv, epsilon=epsilon, cfg=cfg, alpha0=a0))
+    return jax.jit(lambda ph, yv: linear.linear_svr(
+        ph, yv, epsilon=epsilon, cfg=cfg))
+
+
+# --------------------------------------------------------- f64 certificates
+def _cross_gram_apply(kernel: K.KernelParams, x: np.ndarray,
+                      x_sv: np.ndarray, coef64: np.ndarray) -> np.ndarray:
+    """g = K(x, x_sv) @ coef in float64, CERT_CHUNK rows at a time.
+    Gram blocks come off the f32 device kernel (the precision the model
+    itself lives in) and are accumulated in f64 — the same convention
+    the KKT-certificate test harness uses."""
+    n = x.shape[0]
+    gram_fn = K.make_gram_fn(kernel)
+    xs = jnp.asarray(x_sv, jnp.float32)
+    out = np.empty((n,), np.float64)
+    for s in range(0, n, CERT_CHUNK):
+        e = min(s + CERT_CHUNK, n)
+        blk = np.asarray(gram_fn(jnp.asarray(x[s:e], jnp.float32), xs),
+                         np.float64)
+        out[s:e] = blk @ coef64
+    return out
+
+
+# ----------------------------------------------------------------- adapters
+class _ExactSVCAdapter:
+    """Exact-kernel classification: shard samples, solve with SMO."""
+
+    def __init__(self, x, yy, *, smo_cfg, kernel, engine, mesh,
+                 worker_axes):
+        self.x = np.asarray(x, np.float32)
+        self.yy = np.asarray(yy, np.float32)
+        self.yy64 = self.yy.astype(np.float64)
+        self.cfg = smo_cfg
+        self.kernel = kernel
+        self.ecfg = (KE.EngineConfig(backend=engine)
+                     if isinstance(engine, str) else engine)
+        self.mesh = mesh
+        self.worker_axes = tuple(worker_axes)
+        self.thr = SV_EPS * smo_cfg.C
+
+    kind = "svc"
+
+    def is_sv(self, alpha: np.ndarray) -> np.ndarray:
+        return alpha > self.thr
+
+    def repair(self, idx: np.ndarray, v: np.ndarray) -> np.ndarray:
+        return _repair_equality(v, self.yy[idx])
+
+    def _solve_one(self, idx, a0):
+        xx = jnp.asarray(self.x[idx])
+        yv = jnp.asarray(self.yy[idx])
+        if a0 is None:
+            r = _jitted_node_fit(self.kind, False, 0.0, self.cfg,
+                                 self.kernel, self.ecfg)(xx, yv)
+        else:
+            r = _jitted_node_fit(self.kind, True, 0.0, self.cfg,
+                                 self.kernel, self.ecfg)(
+                                     xx, yv, jnp.asarray(a0))
+        return _NodeFit(idx=idx, alpha=np.asarray(r.alpha),
+                        b=float(r.b), n_iter=int(r.n_iter),
+                        converged=bool(r.converged))
+
+    def _task_y(self, idx):
+        return self.yy[idx]
+
+    def _taskset_kwargs(self):
+        return {}
+
+    def solve_level(self, nodes):
+        """nodes: [(idx, a0-or-None)] -> [_NodeFit], order preserved."""
+        if len(nodes) == 1:
+            idx, a0 = nodes[0]
+            return [self._solve_one(idx, a0)]
+        tasks = tuple(
+            MC.BinaryTask(x=self.x[idx], y=self._task_y(idx), pos=1,
+                          neg=0, indices=idx) for idx, _ in nodes)
+        ts = MC.TaskSet(tasks=tasks, classes=np.array([-1.0, 1.0]),
+                        strategy="cascade")
+        sizes = ts.sizes
+        a0m = None
+        if any(a0 is not None for _, a0 in nodes):
+            # zeros on cold slots reproduce the cold start: clip(0) = 0
+            # and matvec(0) is an exact zero f-cache correction
+            a0m = np.zeros((len(nodes), int(sizes.max())), np.float32)
+            for t, (_, a0) in enumerate(nodes):
+                if a0 is not None:
+                    a0m[t, :len(a0)] = a0
+        fit = dist.fit_taskset(
+            ts, mesh=self.mesh, worker_axes=self.worker_axes,
+            solver="smo", smo_cfg=self.cfg, kernel=self.kernel,
+            engine=self.ecfg, shard="task", alpha0=a0m,
+            **self._taskset_kwargs())
+        return [
+            _NodeFit(idx=nodes[t][0],
+                     alpha=fit.alpha[t, :int(sizes[t])].copy(),
+                     b=float(fit.b[t]), n_iter=int(fit.n_iter[t]),
+                     converged=bool(fit.converged[t]))
+            for t in range(len(nodes))
+        ]
+
+    def certify(self, alpha_full: np.ndarray, root: _NodeFit) -> float:
+        sv = self.is_sv(alpha_full)
+        if sv.any():
+            coef = (alpha_full.astype(np.float64) * self.yy64)[sv]
+            g = _cross_gram_apply(self.kernel, self.x, self.x[sv], coef)
+        else:
+            g = np.zeros((len(alpha_full),), np.float64)
+        f = g - self.yy64
+        return float(smo.kkt_violation(alpha_full, self.yy, f, 0.0,
+                                       self.cfg.C))
+
+
+class _ExactSVRAdapter(_ExactSVCAdapter):
+    """Exact-kernel epsilon-SVR: duals are per-sample betas, the scalar
+    root solve additionally yields the raw doubled multipliers the
+    certificate (and ``alpha_raw_``) needs."""
+
+    def __init__(self, x, y, *, epsilon, smo_cfg, kernel, engine, mesh,
+                 worker_axes):
+        super().__init__(x, np.asarray(y, np.float32), smo_cfg=smo_cfg,
+                         kernel=kernel, engine=engine, mesh=mesh,
+                         worker_axes=worker_axes)
+        self.epsilon = float(epsilon)
+
+    kind = "svr"
+
+    def is_sv(self, beta: np.ndarray) -> np.ndarray:
+        return np.abs(beta) > self.thr
+
+    def repair(self, idx: np.ndarray, v: np.ndarray) -> np.ndarray:
+        return _repair_equality(v, np.ones_like(v))
+
+    def _solve_one(self, idx, a0):
+        xx = jnp.asarray(self.x[idx])
+        yv = jnp.asarray(self.yy[idx])
+        if a0 is None:
+            r = _jitted_node_fit(self.kind, False, self.epsilon, self.cfg,
+                                 self.kernel, self.ecfg)(xx, yv)
+        else:
+            b0 = jnp.asarray(a0)
+            a02 = jnp.concatenate([jnp.maximum(b0, 0.0),
+                                   jnp.maximum(-b0, 0.0)])
+            r = _jitted_node_fit(self.kind, True, self.epsilon, self.cfg,
+                                 self.kernel, self.ecfg)(xx, yv, a02)
+        return _NodeFit(idx=idx, alpha=np.asarray(r.beta),
+                        b=float(r.b), n_iter=int(r.n_iter),
+                        converged=bool(r.converged),
+                        raw=np.asarray(r.alpha))
+
+    def _taskset_kwargs(self):
+        return {"svr_epsilon": self.epsilon}
+
+    def certify(self, beta_full: np.ndarray, root: _NodeFit) -> float:
+        n = len(beta_full)
+        sv = self.is_sv(beta_full)
+        if sv.any():
+            g = _cross_gram_apply(self.kernel, self.x, self.x[sv],
+                                  beta_full.astype(np.float64)[sv])
+        else:
+            g = np.zeros((n,), np.float64)
+        f = np.concatenate([g + self.epsilon - self.yy64,
+                            g - self.epsilon - self.yy64])
+        s2 = np.concatenate([np.ones((n,), np.float32),
+                             -np.ones((n,), np.float32)])
+        a2 = self.scatter_raw(beta_full, root)
+        return float(smo.kkt_violation(a2, s2, f, 0.0, self.cfg.C))
+
+    def scatter_raw(self, beta_full: np.ndarray,
+                    root: _NodeFit) -> np.ndarray:
+        """(2n,) raw doubled multipliers from the root's actual solve
+        (the root is always scalar-solved, so ``raw`` is present)."""
+        n = len(beta_full)
+        a2 = np.zeros((2 * n,), np.float32)
+        k = len(root.idx)
+        a2[root.idx] = root.raw[:k]
+        a2[n + root.idx] = root.raw[k:]
+        return a2
+
+
+class _DCDSVCAdapter:
+    """Low-rank classification over a SHARED feature matrix Φ: shards
+    slice rows of Φ, nodes are augmented-bias DCD solves (no equality
+    constraint — warm starts need no repair), the certificate pins
+    r = 0 (the test-harness convention for the linear path)."""
+
+    def __init__(self, phi, yy, *, dcd_cfg):
+        self.phi = jnp.asarray(phi, jnp.float32)
+        self.yy = np.asarray(yy, np.float32)
+        self.yy64 = self.yy.astype(np.float64)
+        self.cfg = dcd_cfg
+        self.thr = SV_EPS * dcd_cfg.C
+        # Phibar = [Phi, bias] in f64 once — the certificate operand
+        n = self.phi.shape[0]
+        self.phib64 = np.concatenate(
+            [np.asarray(self.phi, np.float64),
+             np.full((n, 1), dcd_cfg.bias, np.float64)], axis=1)
+
+    kind = "svc"
+
+    def is_sv(self, alpha: np.ndarray) -> np.ndarray:
+        return alpha > self.thr
+
+    def repair(self, idx: np.ndarray, v: np.ndarray) -> np.ndarray:
+        return np.asarray(v, np.float32)   # no equality constraint
+
+    def _solve_one(self, idx, a0):
+        ph = self.phi[jnp.asarray(idx)]
+        yv = jnp.asarray(self.yy[idx])
+        if a0 is None:
+            r = _jitted_dcd(self.kind, False, 0.0, self.cfg)(ph, yv)
+        else:
+            r = _jitted_dcd(self.kind, True, 0.0, self.cfg)(
+                ph, yv, jnp.asarray(a0))
+        return _NodeFit(idx=idx, alpha=np.asarray(r.alpha),
+                        b=float(r.b), n_iter=int(r.n_iter),
+                        converged=bool(r.converged), w=np.asarray(r.w))
+
+    def solve_level(self, nodes):
+        return [self._solve_one(idx, a0) for idx, a0 in nodes]
+
+    def certify(self, alpha_full: np.ndarray, root: _NodeFit) -> float:
+        wbar = self.phib64.T @ (alpha_full.astype(np.float64) * self.yy64)
+        f = self.phib64 @ wbar - self.yy64
+        return float(smo.kkt_violation(alpha_full, self.yy, f, 0.0,
+                                       self.cfg.C, r=0.0))
+
+
+class _DCDSVRAdapter(_DCDSVCAdapter):
+    """Low-rank epsilon-SVR cascade (doubled DCD per node)."""
+
+    def __init__(self, phi, y, *, epsilon, dcd_cfg):
+        super().__init__(phi, np.asarray(y, np.float32), dcd_cfg=dcd_cfg)
+        self.epsilon = float(epsilon)
+
+    kind = "svr"
+
+    def is_sv(self, beta: np.ndarray) -> np.ndarray:
+        return np.abs(beta) > self.thr
+
+    def _solve_one(self, idx, a0):
+        ph = self.phi[jnp.asarray(idx)]
+        yv = jnp.asarray(self.yy[idx])
+        if a0 is None:
+            r = _jitted_dcd(self.kind, False, self.epsilon, self.cfg)(
+                ph, yv)
+        else:
+            r = _jitted_dcd(self.kind, True, self.epsilon, self.cfg)(
+                ph, yv, jnp.asarray(a0))
+        return _NodeFit(idx=idx, alpha=np.asarray(r.beta),
+                        b=float(r.b), n_iter=int(r.n_iter),
+                        converged=bool(r.converged),
+                        raw=np.asarray(r.alpha), w=np.asarray(r.w))
+
+    def scatter_raw(self, beta_full: np.ndarray,
+                    root: _NodeFit) -> np.ndarray:
+        n = len(beta_full)
+        a2 = np.zeros((2 * n,), np.float32)
+        k = len(root.idx)
+        a2[root.idx] = root.raw[:k]
+        a2[n + root.idx] = root.raw[k:]
+        return a2
+
+    def certify(self, beta_full: np.ndarray, root: _NodeFit) -> float:
+        n = len(beta_full)
+        wbar = self.phib64.T @ beta_full.astype(np.float64)
+        g = self.phib64 @ wbar
+        f = np.concatenate([g + self.epsilon - self.yy64,
+                            g - self.epsilon - self.yy64])
+        s2 = np.concatenate([np.ones((n,), np.float32),
+                             -np.ones((n,), np.float32)])
+        a2 = self.scatter_raw(beta_full, root)
+        return float(smo.kkt_violation(a2, s2, f, 0.0, self.cfg.C,
+                                       r=0.0))
+
+
+# ------------------------------------------------------------------- driver
+def _merge(a: _NodeFit, b: _NodeFit, adapter):
+    """SV-union of two solved children -> (idx, warm start) for the
+    parent. Duplicated rows (feedback rounds re-inject global SVs into
+    every shard) resolve first-wins; the merged start is projected back
+    onto the solver's equality constraint by ``adapter.repair``."""
+    ka, kb = adapter.is_sv(a.alpha), adapter.is_sv(b.alpha)
+    idx = np.concatenate([a.idx[ka], b.idx[kb]])
+    vals = np.concatenate([a.alpha[ka], b.alpha[kb]])
+    if len(idx) == 0:
+        # degenerate children (e.g. single-class shards solved to
+        # alpha = 0): hand the parent a token sample per child so the
+        # solve stays non-empty
+        idx = np.unique(np.concatenate([a.idx[:1], b.idx[:1]]))
+        return idx, None
+    uniq, first = np.unique(idx, return_index=True)
+    return uniq, adapter.repair(uniq, vals[first])
+
+
+def _run_cascade(n: int, adapter, cascade: CascadeConfig,
+                 tol: float) -> tuple:
+    """Shared round/tree driver; returns (alpha_full, root, n_iter,
+    converged, kkt, rounds, history)."""
+    parts = partition_indices(n, cascade.shards)
+    prev_alpha = None      # (n,) last round's global scatter
+    prev_sv = None
+    prev_viol = None
+    history = []
+    total_iter = 0
+    converged = False
+    viol = float("inf")
+    rnd = 0
+    for rnd in range(1, max(1, cascade.rounds) + 1):
+        if prev_alpha is None:
+            leaves = [(p, None) for p in parts]
+        else:
+            sv_idx = np.flatnonzero(adapter.is_sv(prev_alpha))
+            leaves = []
+            for p in parts:
+                idx = np.unique(np.concatenate([p, sv_idx]))
+                leaves.append((idx, adapter.repair(idx, prev_alpha[idx])))
+        solved = adapter.solve_level(leaves)
+        total_iter += sum(s.n_iter for s in solved)
+        n_nodes = len(solved)
+        while len(solved) > 1:
+            carry = None
+            if len(solved) % 2:
+                carry, solved = solved[-1], solved[:-1]
+            to_solve = [_merge(solved[i], solved[i + 1], adapter)
+                        for i in range(0, len(solved), 2)]
+            new = adapter.solve_level(to_solve)
+            total_iter += sum(s.n_iter for s in new)
+            n_nodes += len(new)
+            solved = new + ([carry] if carry is not None else [])
+        root = solved[0]
+        alpha_full = np.zeros((n,), np.float32)
+        alpha_full[root.idx] = root.alpha
+        viol = adapter.certify(alpha_full, root)
+        sv_now = np.flatnonzero(adapter.is_sv(alpha_full))
+        history.append({"round": rnd, "nodes": n_nodes,
+                        "root_size": int(len(root.idx)),
+                        "sv": int(len(sv_now)), "kkt": viol,
+                        "n_iter": total_iter})
+        prev_alpha = alpha_full
+        if viol <= tol:
+            converged = True
+            break
+        if (prev_sv is not None and prev_viol is not None
+                and viol == prev_viol
+                and np.array_equal(sv_now, prev_sv)):
+            # fixed point: feedback reproduced the identical solution,
+            # further rounds cannot move the certificate
+            break
+        prev_sv, prev_viol = sv_now, viol
+    return (prev_alpha, root, total_iter, converged, viol, rnd,
+            tuple(history))
+
+
+# ------------------------------------------------------------- entry points
+def cascade_binary(x, yy, *,
+                   smo_cfg: smo.SMOConfig = smo.SMOConfig(),
+                   kernel: K.KernelParams = K.KernelParams(),
+                   engine=None,
+                   cascade: CascadeConfig = CascadeConfig(),
+                   mesh=None,
+                   worker_axes: tuple[str, ...] = ("workers",)
+                   ) -> CascadeResult:
+    """Exact-kernel binary cascade. ``yy`` in {+1, -1}; with a mesh,
+    each level's shard solves distribute task-parallel through
+    ``dist.fit_taskset``."""
+    adapter = _ExactSVCAdapter(x, yy, smo_cfg=smo_cfg, kernel=kernel,
+                               engine=engine, mesh=mesh,
+                               worker_axes=worker_axes)
+    tol = smo_cfg.tol if cascade.tol is None else cascade.tol
+    alpha, root, n_iter, conv, viol, rounds, hist = _run_cascade(
+        len(adapter.yy), adapter, cascade, tol)
+    return CascadeResult(alpha=alpha, b=root.b, n_iter=n_iter,
+                         converged=conv, kkt=viol, rounds=rounds,
+                         history=hist)
+
+
+def cascade_svr(x, y, *,
+                epsilon: float = 0.1,
+                smo_cfg: smo.SMOConfig = smo.SMOConfig(),
+                kernel: K.KernelParams = K.KernelParams(),
+                engine=None,
+                cascade: CascadeConfig = CascadeConfig(),
+                mesh=None,
+                worker_axes: tuple[str, ...] = ("workers",)
+                ) -> CascadeResult:
+    """Exact-kernel epsilon-SVR cascade; ``alpha`` is the per-sample
+    beta vector, ``alpha_raw`` the (2n,) doubled scatter of the root
+    solve."""
+    adapter = _ExactSVRAdapter(x, y, epsilon=epsilon, smo_cfg=smo_cfg,
+                               kernel=kernel, engine=engine, mesh=mesh,
+                               worker_axes=worker_axes)
+    tol = smo_cfg.tol if cascade.tol is None else cascade.tol
+    beta, root, n_iter, conv, viol, rounds, hist = _run_cascade(
+        len(adapter.yy), adapter, cascade, tol)
+    return CascadeResult(alpha=beta, b=root.b, n_iter=n_iter,
+                         converged=conv, kkt=viol, rounds=rounds,
+                         history=hist,
+                         alpha_raw=adapter.scatter_raw(beta, root))
+
+
+def cascade_dcd(phi, yy, *,
+                dcd_cfg: linear.DCDConfig = linear.DCDConfig(),
+                cascade: CascadeConfig = CascadeConfig()
+                ) -> CascadeResult:
+    """Low-rank classification cascade over a shared feature matrix
+    ``phi`` (transform the full X ONCE, then cascade over row slices).
+    Returns the root's primal ``w`` for serving."""
+    adapter = _DCDSVCAdapter(phi, yy, dcd_cfg=dcd_cfg)
+    tol = dcd_cfg.tol if cascade.tol is None else cascade.tol
+    alpha, root, n_iter, conv, viol, rounds, hist = _run_cascade(
+        len(adapter.yy), adapter, cascade, tol)
+    return CascadeResult(alpha=alpha, b=root.b, n_iter=n_iter,
+                         converged=conv, kkt=viol, rounds=rounds,
+                         history=hist, w=root.w)
+
+
+def cascade_dcd_svr(phi, y, *,
+                    epsilon: float = 0.1,
+                    dcd_cfg: linear.DCDConfig = linear.DCDConfig(),
+                    cascade: CascadeConfig = CascadeConfig()
+                    ) -> CascadeResult:
+    """Low-rank epsilon-SVR cascade over a shared feature matrix."""
+    adapter = _DCDSVRAdapter(phi, y, epsilon=epsilon, dcd_cfg=dcd_cfg)
+    tol = dcd_cfg.tol if cascade.tol is None else cascade.tol
+    beta, root, n_iter, conv, viol, rounds, hist = _run_cascade(
+        len(adapter.yy), adapter, cascade, tol)
+    return CascadeResult(alpha=beta, b=root.b, n_iter=n_iter,
+                         converged=conv, kkt=viol, rounds=rounds,
+                         history=hist, w=root.w,
+                         alpha_raw=adapter.scatter_raw(beta, root))

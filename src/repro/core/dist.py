@@ -92,10 +92,31 @@ class OvOFit(NamedTuple):
     converged: jax.Array  # (C,) bool (always True for GD: fixed steps)
 
 
-def _fit_many_smo(x, y, mask, *, cfg: smo_mod.SMOConfig,
+def resolve_worker_count(mesh: Optional[Mesh],
+                         worker_axes: tuple[str, ...]) -> int:
+    """Worker count of a task-parallel layout: the product of the mesh
+    extents over ``worker_axes`` (1 without a mesh). Validates the axis
+    names up front — ``mesh.shape[axis]`` raises a bare ``KeyError``
+    otherwise, which used to surface from ``shard="auto"`` as an opaque
+    crash. Shared by ``fit_taskset`` and the ``SVC``/``SVR`` routing so
+    the entry points cannot drift."""
+    if mesh is None:
+        return 1
+    missing = tuple(a for a in worker_axes if a not in mesh.shape)
+    if missing:
+        raise ValueError(
+            f"worker axes {missing} are not axes of the mesh "
+            f"(mesh axes: {tuple(mesh.shape)}); pass worker_axes "
+            f"matching the mesh (make_shard_mesh's default axis is "
+            f"'shards')")
+    return int(np.prod([mesh.shape[a] for a in worker_axes]))
+
+
+def _fit_many_smo(x, y, mask, a0=None, *, cfg: smo_mod.SMOConfig,
                   kernel: K.KernelParams,
                   engine: Optional[KE.EngineConfig | str] = None) -> OvOFit:
-    """vmap of the binary solver over a stacked task axis."""
+    """vmap of the binary solver over a stacked task axis; ``a0`` is an
+    optional stacked per-task warm start (cascade outer rounds)."""
     engine = _batched_engine(engine)
     if cfg.shrink_every:
         # adaptive shrinking targets the scalar-jit path: under vmap the
@@ -104,11 +125,38 @@ def _fit_many_smo(x, y, mask, *, cfg: smo_mod.SMOConfig,
         # kernel_engine module docs) — force it off for batched dispatch
         cfg = dataclasses.replace(cfg, shrink_every=0)
 
-    def one(xt, yt, mt):
+    def one(xt, yt, mt, a0t=None):
         r = smo_mod.binary_smo(xt, yt, mt, cfg=cfg, kernel=kernel,
-                               engine=engine)
+                               engine=engine, alpha0=a0t)
         return OvOFit(r.alpha, r.b, r.n_iter, r.converged)
-    return jax.vmap(one)(x, y, mask)
+    if a0 is None:
+        return jax.vmap(one)(x, y, mask)
+    return jax.vmap(one)(x, y, mask, a0)
+
+
+def _fit_many_svr(x, y, mask, a0=None, *, epsilon: float,
+                  cfg: smo_mod.SMOConfig, kernel: K.KernelParams,
+                  engine: Optional[KE.EngineConfig | str] = None) -> OvOFit:
+    """vmap of the doubled epsilon-SVR solver over a stacked task axis.
+    ``y`` holds real-valued targets; ``OvOFit.alpha`` carries the
+    per-sample regression coefficients beta = alpha - alpha* (the raw
+    doubled multipliers stay internal). ``a0`` is a stacked per-task
+    BETA warm start, split into its canonical doubled decomposition."""
+    engine = _batched_engine(engine)
+    if cfg.shrink_every:
+        cfg = dataclasses.replace(cfg, shrink_every=0)
+
+    def one(xt, yt, mt, b0=None):
+        a02 = None
+        if b0 is not None:
+            a02 = jnp.concatenate([jnp.maximum(b0, 0.0),
+                                   jnp.maximum(-b0, 0.0)])
+        r = smo_mod.svr_smo(xt, yt, mt, epsilon=epsilon, cfg=cfg,
+                            kernel=kernel, engine=engine, alpha0=a02)
+        return OvOFit(r.beta, r.b, r.n_iter, r.converged)
+    if a0 is None:
+        return jax.vmap(one)(x, y, mask)
+    return jax.vmap(one)(x, y, mask, a0)
 
 
 def _fit_many_gd(x, y, mask, *, cfg: gd_mod.GDConfig,
@@ -123,14 +171,19 @@ def _fit_many_gd(x, y, mask, *, cfg: gd_mod.GDConfig,
 
 
 @partial(jax.jit, static_argnames=("solver", "smo_cfg", "gd_cfg",
-                                   "kernel", "engine"))
-def _fit_many(x, y, mask, *, solver, smo_cfg, gd_cfg, kernel, engine):
+                                   "kernel", "engine", "svr_epsilon"))
+def _fit_many(x, y, mask, a0=None, *, solver, smo_cfg, gd_cfg, kernel,
+              engine, svr_epsilon=None):
     """Jitted stacked fit with all configs static: one compiled program
     per (config, bucket SHAPE) pair, shared across fit_taskset calls —
     a fresh ``jax.jit(partial(...))`` per call would retrace every
-    bucket on every fit."""
+    bucket on every fit. ``svr_epsilon`` switches the tasks to the
+    doubled epsilon-SVR spec (``y`` = targets, alpha out = beta)."""
+    if svr_epsilon is not None:
+        return _fit_many_svr(x, y, mask, a0, epsilon=svr_epsilon,
+                             cfg=smo_cfg, kernel=kernel, engine=engine)
     if solver == "smo":
-        return _fit_many_smo(x, y, mask, cfg=smo_cfg, kernel=kernel,
+        return _fit_many_smo(x, y, mask, a0, cfg=smo_cfg, kernel=kernel,
                              engine=engine)
     return _fit_many_gd(x, y, mask, cfg=gd_cfg, kernel=kernel,
                         engine=engine)
@@ -138,14 +191,18 @@ def _fit_many(x, y, mask, *, solver, smo_cfg, gd_cfg, kernel, engine):
 
 @lru_cache(maxsize=64)
 def _sharded_fit_many(mesh, worker_axes, solver, smo_cfg, gd_cfg, kernel,
-                      engine):
+                      engine, svr_epsilon=None, warm=False):
     """shard_map-wrapped jitted fit, cached per (mesh, config): jit keys
     its trace cache on the callable object, so rebuilding the wrapper
-    inside the bucket loop would recompile every bucket on every call."""
+    inside the bucket loop would recompile every bucket on every call.
+    ``warm`` switches to the 4-input (x, y, mask, alpha0) wrapper — the
+    in_specs tuple must match the argument count."""
     fit_local = partial(_fit_many, solver=solver, smo_cfg=smo_cfg,
-                        gd_cfg=gd_cfg, kernel=kernel, engine=engine)
+                        gd_cfg=gd_cfg, kernel=kernel, engine=engine,
+                        svr_epsilon=svr_epsilon)
     spec = P(worker_axes)
-    return jax.jit(_shard_map(fit_local, mesh, (spec, spec, spec),
+    n_in = 4 if warm else 3
+    return jax.jit(_shard_map(fit_local, mesh, (spec,) * n_in,
                               OvOFit(spec, spec, spec, spec)))
 
 
@@ -161,15 +218,21 @@ class TaskSetFit(NamedTuple):
     sizes: np.ndarray      # (C,) int true task lengths
 
 
-def _bucket_arrays(taskset: MC.TaskSet, bucket: MC.Bucket):
+def _bucket_arrays(taskset: MC.TaskSet, bucket: MC.Bucket,
+                   alpha0: Optional[np.ndarray] = None):
     """Stack one bucket's tasks into (P * slots, width, d) solver inputs,
     rows ordered so a worker-axis shard gives worker p exactly the tasks
-    the LPT layout assigned it. Dummy slots (-1) are fully masked."""
+    the LPT layout assigned it. Dummy slots (-1) are fully masked.
+    ``alpha0`` is a (C, max_k) per-task warm-start matrix (TaskSetFit
+    layout); the stacked (slots, width) warm starts come back as the
+    fourth element (None when no warm start was given)."""
     ids = bucket.task_ids.reshape(-1)
     d = taskset.tasks[0].x.shape[1]
     xt = np.zeros((len(ids), bucket.width, d), np.float32)
     yt = np.zeros((len(ids), bucket.width), np.float32)
     mk = np.zeros((len(ids), bucket.width), bool)
+    a0 = (None if alpha0 is None
+          else np.zeros((len(ids), bucket.width), np.float32))
     for s, t in enumerate(ids):
         if t < 0:
             continue
@@ -178,7 +241,9 @@ def _bucket_arrays(taskset: MC.TaskSet, bucket: MC.Bucket):
         xt[s, :k] = task.x
         yt[s, :k] = task.y
         mk[s, :k] = True
-    return xt, yt, mk
+        if a0 is not None:
+            a0[s, :k] = alpha0[t, :k]
+    return xt, yt, mk, a0
 
 
 def _data_parallel_bucket(taskset: MC.TaskSet, bucket: MC.Bucket, *,
@@ -258,7 +323,9 @@ def fit_taskset(taskset: MC.TaskSet,
                 engine: Optional[KE.EngineConfig | str] = None,
                 schedule_cfg: Optional[MC.ScheduleConfig] = None,
                 shard: str = "task",
-                data_min_width: int = DATA_PARALLEL_MIN_WIDTH
+                data_min_width: int = DATA_PARALLEL_MIN_WIDTH,
+                alpha0: Optional[np.ndarray] = None,
+                svr_epsilon: Optional[float] = None
                 ) -> TaskSetFit:
     """Fit every binary task of ``taskset``, one solver program per
     schedule bucket.
@@ -281,10 +348,26 @@ def fit_taskset(taskset: MC.TaskSet,
       >= ``data_min_width`` AND it has fewer real tasks than workers
       (i.e. task parallelism would leave devices idle); small/plentiful
       buckets stay vmapped task-parallel.
+
+    ``alpha0`` is an optional (C, max_k) per-task warm-start matrix in
+    the ``TaskSetFit.alpha`` layout (the cascade feeds a previous
+    round's solution back in); ``svr_epsilon`` switches every task to
+    the doubled epsilon-SVR spec (task ``y`` = real targets, returned
+    ``alpha`` = per-sample beta). Both are task-parallel SMO features:
+    they require ``solver="smo"`` and never route data-parallel.
     """
-    n_workers = 1
-    if mesh is not None:
-        n_workers = int(np.prod([mesh.shape[a] for a in worker_axes]))
+    n_workers = resolve_worker_count(mesh, tuple(worker_axes))
+    if (alpha0 is not None or svr_epsilon is not None):
+        if solver != "smo":
+            raise ValueError(
+                "alpha0 warm starts / svr_epsilon tasks require "
+                f"solver='smo' (got solver={solver!r})")
+        if shard == "data":
+            raise ValueError(
+                "alpha0/svr_epsilon run on the task-parallel vmapped "
+                "path only; shard='data' (sharded_binary_smo) has no "
+                "warm-start or SVR-taskset support — use shard='task' "
+                "or 'auto'")
     if schedule is None:
         cfg = schedule_cfg if schedule_cfg is not None else MC.ScheduleConfig()
         cfg = dataclasses.replace(cfg, n_workers=n_workers)
@@ -302,7 +385,7 @@ def fit_taskset(taskset: MC.TaskSet,
     if isinstance(engine, str):
         engine = KE.EngineConfig(backend=engine)
     cfgs = dict(solver=solver, smo_cfg=smo_cfg, gd_cfg=gd_cfg,
-                kernel=kernel, engine=engine)
+                kernel=kernel, engine=engine, svr_epsilon=svr_epsilon)
 
     sizes = taskset.sizes
     c = taskset.n_tasks
@@ -311,11 +394,13 @@ def fit_taskset(taskset: MC.TaskSet,
     n_iter = np.zeros(c, np.int64)
     converged = np.zeros(c, bool)
 
+    warmless = alpha0 is None and svr_epsilon is None
     for bucket in schedule.buckets:
         real_ids = bucket.task_ids.reshape(-1)
         real_ids = real_ids[real_ids >= 0]
-        if _wants_data_parallel(shard, bucket, len(real_ids), n_workers,
-                                solver, mesh, worker_axes, data_min_width):
+        if warmless and _wants_data_parallel(
+                shard, bucket, len(real_ids), n_workers, solver, mesh,
+                worker_axes, data_min_width):
             outs = _data_parallel_bucket(
                 taskset, bucket, mesh=mesh, axis=worker_axes[0],
                 smo_cfg=smo_cfg, kernel=kernel, engine=engine)
@@ -326,16 +411,22 @@ def fit_taskset(taskset: MC.TaskSet,
                 n_iter[t] = int(r.n_iter)
                 converged[t] = bool(r.converged)
             continue
-        xt, yt, mk = _bucket_arrays(taskset, bucket)
+        xt, yt, mk, a0 = _bucket_arrays(taskset, bucket, alpha0)
         if mesh is None:
             out = _fit_many(jnp.asarray(xt), jnp.asarray(yt),
-                            jnp.asarray(mk), **cfgs)
+                            jnp.asarray(mk),
+                            None if a0 is None else jnp.asarray(a0),
+                            **cfgs)
         else:
-            fit = _sharded_fit_many(mesh, tuple(worker_axes), **cfgs)
+            fit = _sharded_fit_many(mesh, tuple(worker_axes),
+                                    warm=a0 is not None, **cfgs)
             sh = NamedSharding(mesh, P(worker_axes))
-            out = fit(jax.device_put(jnp.asarray(xt), sh),
-                      jax.device_put(jnp.asarray(yt), sh),
-                      jax.device_put(jnp.asarray(mk), sh))
+            args = [jax.device_put(jnp.asarray(xt), sh),
+                    jax.device_put(jnp.asarray(yt), sh),
+                    jax.device_put(jnp.asarray(mk), sh)]
+            if a0 is not None:
+                args.append(jax.device_put(jnp.asarray(a0), sh))
+            out = fit(*args)
         out = jax.tree.map(np.asarray, out)
         for s, t in enumerate(bucket.task_ids.reshape(-1)):
             if t < 0:
@@ -423,7 +514,7 @@ def distributed_ovo_fit(tasks: OvOTasks,
     The task axis length must be divisible by the total worker count
     (use ``build_tasks(pad_tasks_to=n_workers)``).
     """
-    n_workers = int(np.prod([mesh.shape[a] for a in worker_axes]))
+    n_workers = resolve_worker_count(mesh, tuple(worker_axes))
     c_total = tasks.x.shape[0]
     if c_total % n_workers:
         raise ValueError(

@@ -79,12 +79,17 @@ class DCDResult(NamedTuple):
 def dcd_qp(phi: jax.Array, y: jax.Array, p: jax.Array,
            lo: jax.Array, hi: jax.Array,
            mask: Optional[jax.Array] = None, *,
-           cfg: DCDConfig = DCDConfig()) -> DCDResult:
+           cfg: DCDConfig = DCDConfig(),
+           alpha0: Optional[jax.Array] = None) -> DCDResult:
     """Minimize ``1/2 beta^T Qbar beta + p^T (y-signed terms)`` over the
     box ``lo <= beta <= hi`` where ``Qbar_ij = y_i y_j (phi_i.phi_j +
     bias^2)`` — generic spec-driven form shared by SVC and SVR (module
     docstring). ``mask=False`` coordinates are frozen at their initial
-    value (0) and excluded from the stopping criterion."""
+    value (0) and excluded from the stopping criterion. ``alpha0`` warm
+    starts the sweep (clipped to the box, zeroed on masked coordinates);
+    the augmented-bias dual has no equality constraint, so any
+    box-feasible start is admissible — None keeps the cold beta = 0
+    start bit-identical to the pre-warm-start solver."""
     phi = jnp.asarray(phi, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     p = jnp.broadcast_to(jnp.asarray(p, jnp.float32), y.shape)
@@ -141,7 +146,13 @@ def dcd_qp(phi: jax.Array, y: jax.Array, p: jax.Array,
         _, _, _, viol, n_ep = state
         return (viol > stop) & (n_ep < cfg.max_epochs)
 
-    init = (jnp.zeros((n,), jnp.float32), jnp.zeros((k,), jnp.float32),
+    if alpha0 is None:
+        beta0 = jnp.zeros((n,), jnp.float32)
+    else:
+        # each epoch refreshes (w, wb) from beta via exact_w, so the warm
+        # start only needs the clipped multipliers themselves
+        beta0 = jnp.clip(jnp.asarray(alpha0, jnp.float32), lo, hi) * live
+    init = (beta0, jnp.zeros((k,), jnp.float32),
             jnp.float32(0.0), jnp.float32(jnp.inf), jnp.int32(0))
     beta, _, _, viol, n_ep = jax.lax.while_loop(keep_going, epoch, init)
     w, wsum = exact_w(beta)   # the served/certified state, drift-free
@@ -151,14 +162,16 @@ def dcd_qp(phi: jax.Array, y: jax.Array, p: jax.Array,
 
 def linear_svc(phi: jax.Array, y: jax.Array, *,
                cfg: DCDConfig = DCDConfig(),
-               mask: Optional[jax.Array] = None) -> DCDResult:
+               mask: Optional[jax.Array] = None,
+               alpha0: Optional[jax.Array] = None) -> DCDResult:
     """Hinge-loss dual on explicit features: p = -1, box [0, C] (the
     linear-space image of ``smo._classification_spec``). ``y`` in
     {-1, +1}; decision f(z) = phi(z) . w + b."""
     n = phi.shape[0]
     return dcd_qp(phi, y, -jnp.ones((n,), jnp.float32),
                   jnp.zeros((n,), jnp.float32),
-                  jnp.full((n,), cfg.C, jnp.float32), mask, cfg=cfg)
+                  jnp.full((n,), cfg.C, jnp.float32), mask, cfg=cfg,
+                  alpha0=alpha0)
 
 
 class LinearSVRResult(NamedTuple):
@@ -172,19 +185,33 @@ class LinearSVRResult(NamedTuple):
 
 
 def linear_svr(phi: jax.Array, y: jax.Array, *, epsilon: float,
-               cfg: DCDConfig = DCDConfig()) -> LinearSVRResult:
+               cfg: DCDConfig = DCDConfig(),
+               mask: Optional[jax.Array] = None,
+               alpha0: Optional[jax.Array] = None) -> LinearSVRResult:
     """epsilon-insensitive dual as the doubled QP over [Φ; Φ] with signs
     s = [+1; -1] and p = [eps - y; eps + y] (the linear-space image of
     ``smo._svr_spec``); w = Φ^T (alpha - alpha*) falls out of the
-    doubling automatically."""
+    doubling automatically. ``mask`` and ``alpha0`` are per-SAMPLE
+    (length n): the mask doubles with the variables; ``alpha0`` is a
+    beta = alpha - alpha* warm start split into its canonical doubled
+    decomposition ``[max(beta, 0); max(-beta, 0)]``."""
     n = phi.shape[0]
     y = jnp.asarray(y, jnp.float32)
     phi2 = jnp.concatenate([phi, phi], axis=0)
     s = jnp.concatenate([jnp.ones((n,), jnp.float32),
                          -jnp.ones((n,), jnp.float32)])
     p = jnp.concatenate([epsilon - y, epsilon + y])
+    m2 = None
+    if mask is not None:
+        m2 = jnp.concatenate([mask, mask])
+    a2 = None
+    if alpha0 is not None:
+        beta0 = jnp.asarray(alpha0, jnp.float32)
+        a2 = jnp.concatenate([jnp.maximum(beta0, 0.0),
+                              jnp.maximum(-beta0, 0.0)])
     r = dcd_qp(phi2, s, p, jnp.zeros((2 * n,), jnp.float32),
-               jnp.full((2 * n,), cfg.C, jnp.float32), cfg=cfg)
+               jnp.full((2 * n,), cfg.C, jnp.float32), m2, cfg=cfg,
+               alpha0=a2)
     beta = r.alpha[:n] - r.alpha[n:]
     return LinearSVRResult(beta=beta, w=r.w, b=r.b, alpha=r.alpha,
                            n_iter=r.n_iter, converged=r.converged,

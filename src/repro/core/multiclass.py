@@ -37,7 +37,7 @@ one vmapped / shard_mapped solver program per bucket.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -50,12 +50,20 @@ class BinaryTask(NamedTuple):
     ``pos``/``neg`` are indices into ``TaskSet.classes``: a positive
     decision credits ``pos``, a negative one credits ``neg`` (−1 for the
     OvR "rest" pseudo-class, which never receives credit).
+
+    ``indices`` maps task rows back to the ORIGINAL training matrix
+    (``x == X[indices]`` row for row). The low-rank multiclass path
+    uses it to transform the full X once and gather each task's feature
+    rows instead of re-running the feature map per overlapping subset.
+    None (e.g. legacy ``taskset_from_ovo`` conversions, hand-built
+    tasks) falls back to per-task transforms.
     """
 
     x: np.ndarray    # (k, d) float32
     y: np.ndarray    # (k,)   float32 in {+1, -1}
     pos: int
     neg: int
+    indices: Optional[np.ndarray] = None   # (k,) int64 rows into X
 
     @property
     def size(self) -> int:
@@ -127,7 +135,8 @@ class OneVsOneStrategy(MulticlassStrategy):
                 xt = np.concatenate([x[ia], x[ib]], axis=0)
                 yt = np.concatenate([np.ones(len(ia), np.float32),
                                      -np.ones(len(ib), np.float32)])
-                tasks.append(BinaryTask(x=xt, y=yt, pos=a, neg=b))
+                tasks.append(BinaryTask(x=xt, y=yt, pos=a, neg=b,
+                                        indices=np.concatenate([ia, ib])))
         return TaskSet(tasks=tuple(tasks), classes=classes,
                        strategy=self.name)
 
@@ -147,7 +156,8 @@ class OneVsRestStrategy(MulticlassStrategy):
         for c in range(len(classes)):
             yt = -np.ones(x.shape[0], np.float32)
             yt[members[c]] = 1.0
-            tasks.append(BinaryTask(x=x, y=yt, pos=c, neg=-1))
+            tasks.append(BinaryTask(x=x, y=yt, pos=c, neg=-1,
+                                    indices=np.arange(x.shape[0])))
         return TaskSet(tasks=tuple(tasks), classes=classes,
                        strategy=self.name)
 

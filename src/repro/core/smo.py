@@ -361,7 +361,8 @@ def solve_qp(x: jax.Array,
              kernel: K.KernelParams = K.KernelParams(),
              engine: Optional[KE.KernelEngine | KE.EngineConfig | str] = None,
              gram: Optional[jax.Array] = None,
-             row_fn: Optional[Callable] = None) -> SMOResult:
+             row_fn: Optional[Callable] = None,
+             alpha0: Optional[jax.Array] = None) -> SMOResult:
     """Solve the general box-constrained dual QP with parallel SMO:
 
         min_a 1/2 a'Qa + p'a   s.t. sum_i y_i a_i = 0, lo <= a <= hi
@@ -383,6 +384,14 @@ def solve_qp(x: jax.Array,
         computation.
       gram / row_fn: DEPRECATED shims — precomputed (n, n) Gram (forces
         the dense backend) / row override (forces chunked).
+      alpha0: (n,) warm-start multipliers (e.g. a previous cascade
+        round's solution). Clipped to the box and zeroed on masked
+        entries; the f-cache is reconstructed with one engine matvec.
+        The CALLER must keep the equality constraint's initial residue
+        ``sum_i y_i alpha0_i`` at ~0: pair updates preserve it, so a
+        biased start converges to a biased "optimum". None keeps the
+        cold alpha = 0 start (bit-identical to the pre-warm-start
+        solver).
     """
     n = x.shape[0]
     x = x.astype(jnp.float32)
@@ -409,8 +418,13 @@ def solve_qp(x: jax.Array,
     eng = _resolve_engine(x, kernel, cfg, engine, gram, row_fn)
     shrink = cfg.shrink_every > 0
 
-    f0 = y * p  # alpha = 0  =>  f_i = y_i p_i  (classification: -y_i)
-    state0 = _State(alpha=jnp.zeros((n,), jnp.float32), f=f0,
+    if alpha0 is None:
+        a0 = jnp.zeros((n,), jnp.float32)
+        f0 = y * p  # alpha = 0  =>  f_i = y_i p_i (classification: -y_i)
+    else:
+        a0 = jnp.clip(jnp.asarray(alpha0, jnp.float32), lo, hi) * mask
+        f0 = eng.matvec(a0 * y) + y * p
+    state0 = _State(alpha=a0, f=f0,
                     n_iter=jnp.zeros((), jnp.int32),
                     b_up=jnp.asarray(-1.0, jnp.float32),
                     b_low=jnp.asarray(1.0, jnp.float32),
@@ -498,7 +512,8 @@ def binary_smo(x: jax.Array,
                kernel: K.KernelParams = K.KernelParams(),
                engine: Optional[KE.KernelEngine | KE.EngineConfig | str] = None,
                gram: Optional[jax.Array] = None,
-               row_fn: Optional[Callable] = None) -> SMOResult:
+               row_fn: Optional[Callable] = None,
+               alpha0: Optional[jax.Array] = None) -> SMOResult:
     """Solve one binary soft-margin SVM dual with parallel SMO — the
     classification instance of ``solve_qp``.
 
@@ -514,11 +529,14 @@ def binary_smo(x: jax.Array,
         engine backend.
       row_fn: DEPRECATED shim — ``(X, z) -> K(X, z)`` row override; forces
         the chunked engine backend.
+      alpha0: (n,) warm-start multipliers (see ``solve_qp``); None is
+        the cold start.
     """
     y = y.astype(jnp.float32)
     p, lo, hi = _classification_spec(y, cfg.C)
     return solve_qp(x, y, p, lo, hi, mask, cfg=cfg, kernel=kernel,
-                    engine=engine, gram=gram, row_fn=row_fn)
+                    engine=engine, gram=gram, row_fn=row_fn,
+                    alpha0=alpha0)
 
 
 class SVRResult(NamedTuple):
@@ -544,7 +562,8 @@ def svr_smo(x: jax.Array,
             epsilon: float = 0.1,
             cfg: SMOConfig = SMOConfig(),
             kernel: K.KernelParams = K.KernelParams(),
-            engine: Optional[KE.EngineConfig | str] = None) -> SVRResult:
+            engine: Optional[KE.EngineConfig | str] = None,
+            alpha0: Optional[jax.Array] = None) -> SVRResult:
     """Solve one epsilon-SVR dual with parallel SMO (doubled-variable
     instance of ``solve_qp``; see the module docstring).
 
@@ -556,6 +575,10 @@ def svr_smo(x: jax.Array,
       engine: an ``EngineConfig`` or backend name; the engine is built on
         the DOUBLED (2n, d) sample matrix, so a pre-bound (n-row)
         ``KernelEngine`` is rejected.
+      alpha0: (2n,) raw doubled warm-start multipliers [alpha; alpha*]
+        (the layout of ``SVRResult.alpha``; build one from beta as
+        ``[max(beta, 0); max(-beta, 0)]``). See ``solve_qp`` — the
+        caller keeps ``sum_i beta0_i ~ 0``.
     """
     if isinstance(engine, KE.KernelEngine):
         raise ValueError(
@@ -570,7 +593,7 @@ def svr_smo(x: jax.Array,
     if mask is not None:
         m2 = jnp.concatenate([mask, mask])
     r = solve_qp(x2, s, p, lo, hi, m2, cfg=cfg, kernel=kernel,
-                 engine=engine)
+                 engine=engine, alpha0=alpha0)
     return _svr_result(r, n)
 
 

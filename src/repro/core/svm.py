@@ -9,6 +9,7 @@
     clf = SVC(decision="margin")                      # OvO summed margins
     clf = SVC(mesh=mesh, shard="data")                # samples sharded
     clf = SVC(mesh=mesh, shard="auto")                # hybrid per bucket
+    clf = SVC(shard="cascade", cascade_shards=8)      # hierarchical cascade
     clf.fit(X, y)                                     # binary OR multiclass
     clf.predict(Xt); clf.score(Xt, yt)
 
@@ -53,7 +54,17 @@ layout; without a mesh the buckets are vmapped on the local device
 SAMPLE axis of every solve (``smo.sharded_binary_smo`` — one big QP
 across all devices, binary fits included), and ``"auto"`` chooses per
 serving bucket: wide-and-few tasks go data-parallel, small-and-many stay
-task-parallel.
+task-parallel. ``shard="cascade"`` trains hierarchically instead
+(``repro.core.cascade``): the data is partitioned into
+``cascade_shards`` sub-SVMs solved independently (task-parallel over
+the mesh when one is given), support-vector unions merge up a binary
+reduction tree, and feedback rounds (max ``cascade_rounds``) repeat
+until the full-dataset KKT certificate passes at the solver tol —
+``converged_`` reports the CERTIFICATE, and ``cascade_rounds_`` /
+``cascade_kkt_`` / ``cascade_history_`` expose the trail. The serving
+state is identical in shape to every other path, so ``serve.pack`` and
+``Predictor`` work unchanged; on the low-rank backends the cascade runs
+over row slices of the one shared feature map.
 
 All Gram computation — training AND serving — flows through
 ``repro.core.kernel_engine``; ``engine`` picks the backend ("auto" |
@@ -92,6 +103,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import approx, dist, gd, kernel_engine as KE, kernels as K
+from repro.core import cascade as cascade_mod
 from repro.core import linear
 from repro.core import multiclass as MC
 from repro.core import smo
@@ -179,7 +191,9 @@ class SVC:
                  schedule: str = "bucketed",
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",),
-                 shard: str = "task"):
+                 shard: str = "task",
+                 cascade_shards: int = 4,
+                 cascade_rounds: int = 8):
         # the constructor's params keep the gamma<=0 "scale" sentinel;
         # fit() re-resolves from THEM each call, so a refit on new data
         # recomputes gamma (sklearn semantics) instead of reusing the
@@ -198,7 +212,9 @@ class SVC:
                            else KE.EngineConfig(backend=engine, rank=rank,
                                                 landmarks=landmarks,
                                                 seed=seed))
-        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol)
+        # max_iter bounds BOTH solvers: SMO pair updates and (as epochs)
+        # the low-rank DCD sweeps — it used to be silently dropped here
+        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol, max_epochs=max_iter)
         self.strategy = MC.get_strategy(strategy)
         if decision not in ("vote", "margin"):
             raise ValueError(f"unknown OvO decision {decision!r}; "
@@ -210,10 +226,12 @@ class SVC:
         self.schedule = schedule
         self.mesh = mesh
         self.worker_axes = worker_axes
-        if shard not in ("task", "data", "auto"):
-            raise ValueError(f"unknown shard mode {shard!r}; "
-                             "expected 'task', 'data' or 'auto'")
+        if shard not in ("task", "data", "auto", "cascade"):
+            raise ValueError(f"unknown shard mode {shard!r}; expected "
+                             "'task', 'data', 'auto' or 'cascade'")
         self.shard = shard
+        self.cascade_cfg = cascade_mod.CascadeConfig(
+            shards=cascade_shards, rounds=cascade_rounds)
         self._fitted = False
 
     def _serving_cfg(self) -> KE.EngineConfig:
@@ -258,12 +276,13 @@ class SVC:
             dist.validate_data_shard(self.mesh, self.worker_axes,
                                      self.solver)
             return True
-        if self.mesh is None or self.shard == "task":
+        if self.mesh is None or self.shard in ("task", "cascade"):
             return False
         # auto: mirror _wants_data_parallel's guards — never route a
-        # single-worker mesh through the collective program
-        n_workers = int(np.prod([self.mesh.shape[a]
-                                 for a in self.worker_axes]))
+        # single-worker mesh through the collective program (worker-axis
+        # resolution validates the axes against the mesh up front)
+        n_workers = dist.resolve_worker_count(self.mesh,
+                                              tuple(self.worker_axes))
         return (self.solver == "smo" and len(self.worker_axes) == 1
                 and n_workers > 1 and n >= dist.DATA_PARALLEL_MIN_WIDTH)
 
@@ -272,7 +291,20 @@ class SVC:
         # decision margin predicts classes_[1]
         yy = np.where(y == classes[1], 1.0, -1.0).astype(np.float32)
         ecfg = self.engine_cfg
-        if self._use_data_parallel_binary(x.shape[0]):
+        if self.shard == "cascade":
+            cascade_mod.validate_cascade(self.solver, self.cascade_cfg)
+            r = cascade_mod.cascade_binary(
+                x, yy, smo_cfg=self.smo_cfg, kernel=self.kernel_params,
+                engine=ecfg, cascade=self.cascade_cfg, mesh=self.mesh,
+                worker_axes=self.worker_axes)
+            self.n_iter_ = int(r.n_iter)
+            # the cascade's convergence IS the certificate: kkt_violation
+            # over the full dataset <= tol, recomputed in float64
+            self.converged_ = bool(r.converged)
+            self.cascade_rounds_ = int(r.rounds)
+            self.cascade_kkt_ = float(r.kkt)
+            self.cascade_history_ = r.history
+        elif self._use_data_parallel_binary(x.shape[0]):
             r = smo.sharded_binary_smo(
                 jnp.asarray(x), jnp.asarray(yy), mesh=self.mesh,
                 axis=self.worker_axes[0], cfg=self.smo_cfg,
@@ -311,8 +343,18 @@ class SVC:
         xj = jnp.asarray(x)
         fmap = approx.make_feature_map(xj, self.kernel_params,
                                        self.engine_cfg)
-        r = linear.fit_linear_svc(self.dcd_cfg)(fmap.transform(xj),
-                                                jnp.asarray(yy))
+        phi = fmap.transform(xj)
+        if self.shard == "cascade":
+            # cascade over row slices of the ONE shared feature map; the
+            # solver knob is ignored on this path, so don't validate it
+            cascade_mod.validate_cascade(None, self.cascade_cfg)
+            r = cascade_mod.cascade_dcd(phi, yy, dcd_cfg=self.dcd_cfg,
+                                        cascade=self.cascade_cfg)
+            self.cascade_rounds_ = int(r.rounds)
+            self.cascade_kkt_ = float(r.kkt)
+            self.cascade_history_ = r.history
+        else:
+            r = linear.fit_linear_svc(self.dcd_cfg)(phi, jnp.asarray(yy))
         self._binary = True
         self._feature_map = fmap
         self.alpha_, self.b_ = np.asarray(r.alpha), float(r.b)
@@ -333,7 +375,16 @@ class SVC:
         taskset = self.strategy.build_taskset(x, y)
         fmap = approx.make_feature_map(jnp.asarray(x), self.kernel_params,
                                        self.engine_cfg)
+        # transform the full X ONCE and gather each task's rows — OvO
+        # tasks overlap heavily (every class appears in m-1 pairs), so
+        # per-task transforms recompute the same feature rows m-1 times
+        phi = fmap.transform(jnp.asarray(x))
         fit = linear.fit_linear_svc(self.dcd_cfg)
+        use_cascade = self.shard == "cascade"
+        if use_cascade:
+            cascade_mod.validate_cascade(None, self.cascade_cfg)
+            rounds = np.zeros(taskset.n_tasks, np.int64)
+            kkt = np.zeros(taskset.n_tasks, np.float64)
         n_tasks = taskset.n_tasks
         task_w = np.zeros((n_tasks, fmap.rank), np.float32)
         task_b = np.zeros((n_tasks,), np.float32)
@@ -343,8 +394,17 @@ class SVC:
         alphas = []
         thr = _sv_threshold(self.smo_cfg.C)
         for t, task in enumerate(taskset.tasks):
-            r = fit(fmap.transform(jnp.asarray(task.x)),
-                    jnp.asarray(task.y))
+            phi_t = (phi[jnp.asarray(task.indices)]
+                     if task.indices is not None
+                     else fmap.transform(jnp.asarray(task.x)))
+            if use_cascade:
+                r = cascade_mod.cascade_dcd(phi_t, task.y,
+                                            dcd_cfg=self.dcd_cfg,
+                                            cascade=self.cascade_cfg)
+                rounds[t] = r.rounds
+                kkt[t] = r.kkt
+            else:
+                r = fit(phi_t, jnp.asarray(task.y))
             a = np.asarray(r.alpha)
             alphas.append(a)
             task_w[t] = np.asarray(r.w)
@@ -352,6 +412,9 @@ class SVC:
             n_support[t] = int((a > thr).sum())
             n_iter[t] = int(r.n_iter)
             converged[t] = bool(r.converged)
+        if use_cascade:
+            self.cascade_rounds_ = rounds
+            self.cascade_kkt_ = kkt
         self._binary = False
         self._feature_map = fmap
         self._taskset = taskset
@@ -362,21 +425,57 @@ class SVC:
         self.n_iter_ = int(n_iter.max())
         self.converged_ = bool(converged.all())
 
+    def _fit_taskset_cascade(self, taskset: MC.TaskSet) -> dist.TaskSetFit:
+        """Each binary task trained by its own hierarchical cascade
+        (shard leaves distribute task-parallel over the mesh inside each
+        cascade level); results come back in TaskSetFit layout so the
+        standard serving compaction applies unchanged. ``converged``
+        entries report the per-task global KKT certificate."""
+        c = taskset.n_tasks
+        sizes = taskset.sizes
+        alpha = np.zeros((c, int(sizes.max())), np.float32)
+        b = np.zeros(c, np.float32)
+        n_iter = np.zeros(c, np.int64)
+        converged = np.zeros(c, bool)
+        rounds = np.zeros(c, np.int64)
+        kkt = np.zeros(c, np.float64)
+        for t, task in enumerate(taskset.tasks):
+            r = cascade_mod.cascade_binary(
+                task.x, task.y, smo_cfg=self.smo_cfg,
+                kernel=self.kernel_params, engine=self.engine_cfg,
+                cascade=self.cascade_cfg, mesh=self.mesh,
+                worker_axes=self.worker_axes)
+            alpha[t, :task.size] = r.alpha
+            b[t] = r.b
+            n_iter[t] = r.n_iter
+            converged[t] = r.converged
+            rounds[t] = r.rounds
+            kkt[t] = r.kkt
+        self.cascade_rounds_ = rounds
+        self.cascade_kkt_ = kkt
+        return dist.TaskSetFit(alpha=alpha, b=b, n_iter=n_iter,
+                               converged=converged, sizes=sizes)
+
     def _fit_multiclass(self, x, y) -> None:
         taskset = self.strategy.build_taskset(x, y)
-        n_workers = 1
-        if self.mesh is not None:
-            n_workers = int(np.prod([self.mesh.shape[a]
-                                     for a in self.worker_axes]))
-        bucket_by = "pow2" if self.schedule == "bucketed" else "none"
-        sched = MC.build_schedule(
-            taskset.sizes,
-            MC.ScheduleConfig(bucket_by=bucket_by, n_workers=n_workers))
-        fit = dist.fit_taskset(
-            taskset, sched, mesh=self.mesh, worker_axes=self.worker_axes,
-            solver=self.solver, smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
-            kernel=self.kernel_params, engine=self.engine_cfg,
-            shard=self.shard)
+        if self.shard == "cascade":
+            cascade_mod.validate_cascade(self.solver, self.cascade_cfg)
+            sched = None
+            fit = self._fit_taskset_cascade(taskset)
+        else:
+            n_workers = dist.resolve_worker_count(self.mesh,
+                                                  tuple(self.worker_axes))
+            bucket_by = "pow2" if self.schedule == "bucketed" else "none"
+            sched = MC.build_schedule(
+                taskset.sizes,
+                MC.ScheduleConfig(bucket_by=bucket_by,
+                                  n_workers=n_workers))
+            fit = dist.fit_taskset(
+                taskset, sched, mesh=self.mesh,
+                worker_axes=self.worker_axes, solver=self.solver,
+                smo_cfg=self.smo_cfg, gd_cfg=self.gd_cfg,
+                kernel=self.kernel_params, engine=self.engine_cfg,
+                shard=self.shard)
         self._binary = False
         self._taskset = taskset
         self._schedule = sched
@@ -497,7 +596,9 @@ class SVR:
                  shrink_every: int = 0,
                  mesh: Optional[Mesh] = None,
                  worker_axes: tuple[str, ...] = ("workers",),
-                 shard: str = "task"):
+                 shard: str = "task",
+                 cascade_shards: int = 4,
+                 cascade_rounds: int = 8):
         # gamma "scale" sentinel kept; re-resolved per fit (see SVC)
         self._kernel_cfg = K.KernelParams(name=kernel, gamma=gamma,
                                           degree=degree, coef0=coef0)
@@ -512,13 +613,17 @@ class SVR:
                            else KE.EngineConfig(backend=engine, rank=rank,
                                                 landmarks=landmarks,
                                                 seed=seed))
-        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol)
+        # max_iter bounds BOTH solvers: SMO pair updates and (as epochs)
+        # the low-rank DCD sweeps — it used to be silently dropped here
+        self.dcd_cfg = linear.DCDConfig(C=C, tol=tol, max_epochs=max_iter)
         self.mesh = mesh
         self.worker_axes = worker_axes
-        if shard not in ("task", "data", "auto"):
-            raise ValueError(f"unknown shard mode {shard!r}; "
-                             "expected 'task', 'data' or 'auto'")
+        if shard not in ("task", "data", "auto", "cascade"):
+            raise ValueError(f"unknown shard mode {shard!r}; expected "
+                             "'task', 'data', 'auto' or 'cascade'")
         self.shard = shard
+        self.cascade_cfg = cascade_mod.CascadeConfig(
+            shards=cascade_shards, rounds=cascade_rounds)
         self._fitted = False
 
     def _use_data_parallel(self, n: int) -> bool:
@@ -528,10 +633,10 @@ class SVR:
             dist.validate_data_shard(self.mesh, self.worker_axes,
                                      self.solver)
             return True
-        if self.mesh is None or self.shard == "task":
+        if self.mesh is None or self.shard in ("task", "cascade"):
             return False
-        n_workers = int(np.prod([self.mesh.shape[a]
-                                 for a in self.worker_axes]))
+        n_workers = dist.resolve_worker_count(self.mesh,
+                                              tuple(self.worker_axes))
         return (self.solver == "smo" and len(self.worker_axes) == 1
                 and n_workers > 1
                 and 2 * n >= dist.DATA_PARALLEL_MIN_WIDTH)
@@ -547,12 +652,34 @@ class SVR:
             # the doubled epsilon-SVR QP (see SVC._fit_binary_lowrank)
             xj = jnp.asarray(x)
             fmap = approx.make_feature_map(xj, self.kernel_params, ecfg)
-            r = linear.fit_linear_svr(eps, self.dcd_cfg)(
-                fmap.transform(xj), jnp.asarray(y))
+            phi = fmap.transform(xj)
+            if self.shard == "cascade":
+                cascade_mod.validate_cascade(None, self.cascade_cfg)
+                r = cascade_mod.cascade_dcd_svr(
+                    phi, y, epsilon=eps, dcd_cfg=self.dcd_cfg,
+                    cascade=self.cascade_cfg)
+                self.cascade_rounds_ = int(r.rounds)
+                self.cascade_kkt_ = float(r.kkt)
+                self.cascade_history_ = r.history
+            else:
+                r = linear.fit_linear_svr(eps, self.dcd_cfg)(
+                    phi, jnp.asarray(y))
             self._feature_map = fmap
             self.w_ = np.asarray(r.w)
             self.n_iter_ = int(r.n_iter)
             self.converged_ = bool(r.converged)
+        elif self.shard == "cascade":
+            cascade_mod.validate_cascade(self.solver, self.cascade_cfg)
+            r = cascade_mod.cascade_svr(
+                x, y, epsilon=eps, smo_cfg=self.smo_cfg,
+                kernel=self.kernel_params, engine=ecfg,
+                cascade=self.cascade_cfg, mesh=self.mesh,
+                worker_axes=self.worker_axes)
+            self.n_iter_ = int(r.n_iter)
+            self.converged_ = bool(r.converged)   # certified (see SVC)
+            self.cascade_rounds_ = int(r.rounds)
+            self.cascade_kkt_ = float(r.kkt)
+            self.cascade_history_ = r.history
         elif self._use_data_parallel(x.shape[0]):
             r = smo.sharded_svr_smo(
                 jnp.asarray(x), jnp.asarray(y), epsilon=eps,
@@ -573,9 +700,16 @@ class SVR:
             self.n_iter_ = int(r.n_iter)
             self.converged_ = True
             self.loss_curve_ = np.asarray(r.loss_curve)
-        self.beta_ = np.asarray(r.beta)
-        self.b_ = float(r.b)
-        self.alpha_raw_ = np.asarray(r.alpha)   # (2n,) [alpha; alpha*]
+        if isinstance(r, cascade_mod.CascadeResult):
+            # cascade layout: alpha IS the per-sample beta, alpha_raw the
+            # (2n,) doubled scatter of the root solve
+            self.beta_ = np.asarray(r.alpha)
+            self.b_ = float(r.b)
+            self.alpha_raw_ = np.asarray(r.alpha_raw)
+        else:
+            self.beta_ = np.asarray(r.beta)
+            self.b_ = float(r.b)
+            self.alpha_raw_ = np.asarray(r.alpha)  # (2n,) [alpha; alpha*]
         # serving state: compacted support-vector set only
         sv = np.abs(self.beta_) > _sv_threshold(self.smo_cfg.C)
         self.support_ = np.where(sv)[0]

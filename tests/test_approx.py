@@ -347,6 +347,60 @@ def test_dcd_mask_freezes_coordinates():
     assert np.all(np.asarray(r.alpha)[40:] == 0.0)
 
 
+def test_dcd_warm_start_from_optimum_converges_immediately():
+    """Feeding the solved betas back as alpha0 must re-certify in one
+    epoch (the cascade's warm-started feedback rounds rely on this)."""
+    rng = np.random.default_rng(3)
+    phi = jnp.asarray(rng.normal(size=(80, 12)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=80)).astype(np.float32))
+    cold = linear.linear_svc(phi, y, cfg=linear.DCDConfig(tol=1e-4))
+    assert bool(cold.converged)
+    warm = linear.linear_svc(phi, y, cfg=linear.DCDConfig(tol=1e-4),
+                             alpha0=cold.alpha)
+    assert bool(warm.converged) and int(warm.n_iter) == 1
+    # the certifying epoch still nudges free coordinates by their
+    # (tol-scale) Newton steps — equality only holds to that scale
+    np.testing.assert_allclose(np.asarray(warm.alpha),
+                               np.asarray(cold.alpha), atol=1e-4)
+
+
+def test_max_iter_bounds_lowrank_epochs():
+    """Regression: SVC/SVR used to build DCDConfig without threading
+    ``max_iter`` into ``max_epochs``, so the knob was silently ignored
+    on the low-rank path."""
+    x, y = _blob_problem(160, seed=5)
+    clf = SVC(engine="nystrom", rank=32, max_iter=2)
+    assert clf.dcd_cfg.max_epochs == 2
+    clf.fit(x, y)
+    assert clf.n_iter_ == 2 and not clf.converged_
+    free = SVC(engine="nystrom", rank=32).fit(x, y)
+    assert free.converged_ and free.n_iter_ > 2
+
+    xr, yr = make_synth_regression(150, 5, seed=5)
+    reg = SVR(engine="rff", rank=32, max_iter=1)
+    assert reg.dcd_cfg.max_epochs == 1
+    reg.fit(normalize(xr), yr)
+    assert reg.n_iter_ == 1 and not reg.converged_
+
+
+def test_lowrank_multiclass_single_transform_bit_identical():
+    """Regression: the multiclass low-rank path used to re-run
+    ``fmap.transform`` per task on overlapping row subsets; it now
+    transforms the full X once and gathers rows via ``task.indices`` —
+    the task weights must be bit-identical to the per-task transforms."""
+    x, y = make_blobs(50, 4, 5, sep=3.0, seed=11)
+    x = normalize(x)
+    clf = SVC(engine="nystrom", rank=32, gamma=0.5).fit(x, y)
+    fmap = clf._feature_map
+    fit = linear.fit_linear_svc(clf.dcd_cfg)
+    for t, task in enumerate(clf._taskset.tasks):
+        assert task.indices is not None
+        np.testing.assert_array_equal(x[task.indices], task.x)
+        r = fit(fmap.transform(jnp.asarray(task.x)), jnp.asarray(task.y))
+        np.testing.assert_array_equal(clf.task_w_[t], np.asarray(r.w))
+        assert clf.task_b_[t] == float(r.b)
+
+
 # ------------------------------------------------------- hypothesis property
 def test_rff_error_property():
     pytest.importorskip(

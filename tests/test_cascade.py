@@ -1,0 +1,277 @@
+"""Cascade SVM: equivalence, certificates, and routing.
+
+The load-bearing claims:
+
+* A single-shard cascade IS the unsharded solver: identical jit body,
+  cold start, no merges — alphas / b / (SVR) raw duals reproduce the
+  plain ``SVC``/``SVR`` fit bit for bit, on the exact AND low-rank
+  paths.
+* A sharded cascade (S in {2, 4}) must pass the same independently
+  recomputed float64 KKT certificate, at the same tol, as the unsharded
+  solver — for SVC and SVR, exact and low-rank per-shard solves. The
+  certificate is recomputed here from scratch (never trusted from the
+  model) with the ``test_kkt_certificate`` conventions.
+* Cascades are deterministic: refits are bit-identical (round-robin
+  partitions, no RNG anywhere in the reduction).
+* The equality-repair projection keeps merged warm starts feasible:
+  sum_i y_i a_i == 0 without leaving the box.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import approx, cascade, kernel_engine as KE, kernels as K
+from repro.core import linear, smo
+from repro.core.svm import SVC, SVR
+from repro.data import make_blobs, make_synth_regression, normalize
+from repro import serve
+
+TOL = 1e-3
+
+
+def _binary_problem(n=240, d=6, seed=0):
+    x, y = make_blobs(n // 2, 2, d, sep=2.5, seed=seed)
+    return normalize(x), y
+
+
+def _regression_problem(n=200, seed=0):
+    x, y = make_synth_regression(n, 5, noise=0.05, seed=seed)
+    return normalize(x), y
+
+
+# --------------------------------------------- independent f64 certificates
+def _svc_violation(clf, x, y):
+    kp = clf.kernel_params
+    yy = np.where(np.asarray(y) == clf.classes_[1], 1.0, -1.0)
+    g = np.asarray(K.make_gram_fn(kp)(jnp.asarray(x), jnp.asarray(x)),
+                   np.float64)
+    f = g @ (clf.alpha_.astype(np.float64) * yy) - yy
+    return float(smo.kkt_violation(clf.alpha_, yy, f, 0.0,
+                                   clf.smo_cfg.C))
+
+
+def _svr_violation(reg, x, y):
+    n = len(y)
+    g = np.asarray(K.make_gram_fn(reg.kernel_params)(
+        jnp.asarray(x), jnp.asarray(x)), np.float64)
+    gb = g @ reg.beta_.astype(np.float64)
+    y64 = np.asarray(y, np.float64)
+    f = np.concatenate([gb + reg.epsilon - y64, gb - reg.epsilon - y64])
+    s = np.concatenate([np.ones(n), -np.ones(n)])
+    return float(smo.kkt_violation(reg.alpha_raw_, s, f, 0.0,
+                                   reg.smo_cfg.C))
+
+
+def _phibar(model, x):
+    phi = np.asarray(model._feature_map.transform(jnp.asarray(x)),
+                     np.float64)
+    bias = np.full((phi.shape[0], 1), model.dcd_cfg.bias, np.float64)
+    return np.concatenate([phi, bias], axis=1)
+
+
+def _svc_violation_lowrank(clf, x, y):
+    yy = np.where(np.asarray(y) == clf.classes_[1], 1.0, -1.0)
+    pb = _phibar(clf, x)
+    f = pb @ (pb.T @ (clf.alpha_.astype(np.float64) * yy)) - yy
+    return float(smo.kkt_violation(clf.alpha_, yy, f, 0.0,
+                                   clf.smo_cfg.C, r=0.0))
+
+
+def _svr_violation_lowrank(reg, x, y):
+    n = len(y)
+    pb = _phibar(reg, x)
+    gb = pb @ (pb.T @ reg.beta_.astype(np.float64))
+    y64 = np.asarray(y, np.float64)
+    f = np.concatenate([gb + reg.epsilon - y64, gb - reg.epsilon - y64])
+    s = np.concatenate([np.ones(n), -np.ones(n)])
+    return float(smo.kkt_violation(reg.alpha_raw_, s, f, 0.0,
+                                   reg.smo_cfg.C, r=0.0))
+
+
+# ------------------------------------------------- single-shard bit-identity
+def test_single_shard_svc_bit_identical_to_unsharded():
+    x, y = _binary_problem()
+    plain = SVC(kernel="rbf", gamma=0.5).fit(x, y)
+    casc = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+               cascade_shards=1).fit(x, y)
+    np.testing.assert_array_equal(casc.alpha_, plain.alpha_)
+    assert casc.b_ == plain.b_
+    np.testing.assert_array_equal(casc.support_, plain.support_)
+    np.testing.assert_array_equal(casc.dual_coef_, plain.dual_coef_)
+    assert casc.cascade_rounds_ == 1 and casc.converged_
+
+
+def test_single_shard_svr_bit_identical_to_unsharded():
+    x, y = _regression_problem()
+    plain = SVR(kernel="rbf", gamma=0.5).fit(x, y)
+    casc = SVR(kernel="rbf", gamma=0.5, shard="cascade",
+               cascade_shards=1).fit(x, y)
+    np.testing.assert_array_equal(casc.beta_, plain.beta_)
+    np.testing.assert_array_equal(casc.alpha_raw_, plain.alpha_raw_)
+    assert casc.b_ == plain.b_ and casc.converged_
+
+
+def test_single_shard_lowrank_bit_identical_to_unsharded():
+    x, y = _binary_problem()
+    kw = dict(engine="nystrom", rank=48, gamma=0.5, seed=3)
+    plain = SVC(**kw).fit(x, y)
+    casc = SVC(shard="cascade", cascade_shards=1, **kw).fit(x, y)
+    np.testing.assert_array_equal(casc.alpha_, plain.alpha_)
+    np.testing.assert_array_equal(casc.w_, plain.w_)
+    assert casc.b_ == plain.b_
+
+
+# ------------------------------------------------- certified sharded solves
+@pytest.mark.parametrize("shards", [2, 4])
+def test_cascade_svc_exact_certifies_at_solver_tol(shards):
+    x, y = _binary_problem()
+    ref = SVC(kernel="rbf", gamma=0.5, tol=TOL).fit(x, y)
+    clf = SVC(kernel="rbf", gamma=0.5, tol=TOL, shard="cascade",
+              cascade_shards=shards).fit(x, y)
+    assert clf.converged_, clf.cascade_history_
+    # the same certificate the unsharded solver passes, same tol
+    assert _svc_violation(ref, x, y) <= TOL
+    assert _svc_violation(clf, x, y) <= TOL
+    # the certified duals describe (numerically) the same model
+    assert clf.score(x, y) == pytest.approx(ref.score(x, y), abs=0.02)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_cascade_svr_exact_certifies_at_solver_tol(shards):
+    x, y = _regression_problem()
+    ref = SVR(kernel="rbf", gamma=0.5, tol=TOL).fit(x, y)
+    reg = SVR(kernel="rbf", gamma=0.5, tol=TOL, shard="cascade",
+              cascade_shards=shards).fit(x, y)
+    assert reg.converged_, reg.cascade_history_
+    assert _svr_violation(ref, x, y) <= TOL
+    assert _svr_violation(reg, x, y) <= TOL
+    assert reg.score(x, y) == pytest.approx(ref.score(x, y), abs=0.05)
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+@pytest.mark.parametrize("engine", ["nystrom", "rff"])
+def test_cascade_svc_lowrank_certifies_at_solver_tol(engine, shards):
+    x, y = _binary_problem()
+    clf = SVC(engine=engine, rank=48, gamma=0.5, tol=TOL, shard="cascade",
+              cascade_shards=shards).fit(x, y)
+    assert clf.converged_, clf.cascade_history_
+    assert _svc_violation_lowrank(clf, x, y) <= TOL
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_cascade_svr_lowrank_certifies_at_solver_tol(shards):
+    x, y = _regression_problem()
+    reg = SVR(engine="rff", rank=64, gamma=0.5, tol=TOL, shard="cascade",
+              cascade_shards=shards).fit(x, y)
+    assert reg.converged_, reg.cascade_history_
+    assert _svr_violation_lowrank(reg, x, y) <= TOL
+
+
+def test_cascade_multiclass_certifies_every_task():
+    x, y = make_blobs(60, 3, 5, sep=2.5, seed=2)
+    x = normalize(x)
+    ref = SVC(kernel="rbf", gamma=0.5).fit(x, y)
+    clf = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+              cascade_shards=2).fit(x, y)
+    assert clf.converged_           # every task's certificate passed
+    assert (clf.cascade_kkt_ <= TOL).all()
+    assert clf.cascade_rounds_.shape == (3,)   # one cascade per OvO pair
+    assert clf.score(x, y) == pytest.approx(ref.score(x, y), abs=0.02)
+
+
+# -------------------------------------------------------------- determinism
+def test_cascade_refit_is_deterministic():
+    x, y = _binary_problem(seed=7)
+    a = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+            cascade_shards=4).fit(x, y)
+    b = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+            cascade_shards=4).fit(x, y)
+    np.testing.assert_array_equal(a.alpha_, b.alpha_)
+    assert a.b_ == b.b_
+    assert a.cascade_rounds_ == b.cascade_rounds_
+    assert a.cascade_kkt_ == b.cascade_kkt_
+
+
+# ----------------------------------------------------------------- serving
+def test_cascade_serving_state_packs_and_serves():
+    """Cascade fits produce the standard compacted serving state, so the
+    pack/Predictor pipeline works unchanged and agrees with the
+    reference engine path."""
+    x, y = _binary_problem()
+    clf = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+              cascade_shards=4).fit(x, y)
+    xt = x[:40]
+    np.testing.assert_allclose(clf.decision_function(xt),
+                               clf._decision_function_engine(xt),
+                               rtol=1e-5, atol=1e-5)
+    assert serve.pack(clf).kind == "svc"
+
+    xm, ym = make_blobs(50, 3, 5, sep=2.5, seed=4)
+    xm = normalize(xm)
+    cm = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+             cascade_shards=2).fit(xm, ym)
+    assert serve.pack(cm).kind == "svc"
+    assert cm.predict(xm).shape == ym.shape
+
+
+# ----------------------------------------------------------- mesh cascades
+@pytest.mark.requires_devices(4)
+def test_cascade_over_mesh_certifies_and_matches_local():
+    """With a mesh, each cascade level's shard solves distribute
+    task-parallel through fit_taskset. The worker layout changes bucket
+    padding (and therefore solver trajectories), so alphas are not
+    bitwise comparable — but the distributed cascade must pass the SAME
+    independently recomputed certificate and describe the same model."""
+    from repro.launch.mesh import make_local_mesh
+    x, y = _binary_problem()
+    local = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+                cascade_shards=4).fit(x, y)
+    dist_ = SVC(kernel="rbf", gamma=0.5, shard="cascade",
+                cascade_shards=4, mesh=make_local_mesh(4)).fit(x, y)
+    assert dist_.converged_
+    assert _svc_violation(dist_, x, y) <= TOL
+    np.testing.assert_allclose(dist_.decision_function(x),
+                               local.decision_function(x), atol=5e-2)
+    assert dist_.score(x, y) == pytest.approx(local.score(x, y),
+                                              abs=0.02)
+
+
+# ------------------------------------------------------- primitive behavior
+def test_repair_equality_projects_onto_constraint():
+    rng = np.random.default_rng(0)
+    y = np.where(rng.random(50) > 0.5, 1.0, -1.0)
+    a = rng.uniform(0.0, 1.0, 50)
+    fixed = cascade._repair_equality(a, y)
+    assert abs(float(np.sum(y * fixed.astype(np.float64)))) < 1e-5
+    assert (fixed >= 0).all() and (fixed <= a + 1e-7).all()
+    # a feasible start is untouched
+    bal = np.concatenate([[0.5, 0.5], np.zeros(8)])
+    yb = np.concatenate([[1.0, -1.0], np.ones(8)])
+    np.testing.assert_array_equal(
+        cascade._repair_equality(bal, yb), bal.astype(np.float32))
+    # SVR convention: y = 1 makes the constraint sum(beta) = 0
+    beta = rng.normal(size=30)
+    fixed = cascade._repair_equality(beta, np.ones(30))
+    assert abs(float(fixed.astype(np.float64).sum())) < 1e-5
+
+
+def test_partition_indices_round_robin_disjoint_cover():
+    parts = cascade.partition_indices(11, 4)
+    assert len(parts) == 4
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 11 and len(np.unique(allidx)) == 11
+    np.testing.assert_array_equal(parts[1], [1, 5, 9])
+    # shards clamp to n
+    assert len(cascade.partition_indices(3, 8)) == 3
+
+
+def test_cascade_validation():
+    x, y = _binary_problem(n=60)
+    with pytest.raises(ValueError, match="solver='smo'"):
+        SVC(solver="gd", shard="cascade").fit(x, y)
+    with pytest.raises(ValueError, match="cascade_shards"):
+        SVC(shard="cascade", cascade_shards=0).fit(x, y)
+    with pytest.raises(ValueError, match="cascade_rounds"):
+        SVR(shard="cascade", cascade_rounds=0).fit(x, y.astype(float))
+    with pytest.raises(ValueError, match="shard mode"):
+        SVC(shard="waterfall")

@@ -383,3 +383,31 @@ def test_fit_taskset_data_without_mesh_raises():
     taskset = MC.get_strategy("ovo").build_taskset(x, y)
     with pytest.raises(ValueError, match="mesh"):
         dist.fit_taskset(taskset, shard="data")
+
+
+@pytest.mark.requires_devices(2)
+def test_shard_auto_axis_mismatch_raises_friendly():
+    """Regression: shard="auto" (and "task" multiclass) on a mesh whose
+    axis names don't match ``worker_axes`` used to crash with a raw
+    ``KeyError`` from ``mesh.shape[axis]``; ``resolve_worker_count``
+    now validates up front and names the mesh axes."""
+    from repro.core.svm import SVR
+    x, yy = _binary_problem(48)
+    yb = (yy > 0).astype(np.int64)
+    mesh = make_shard_mesh(2)   # axis "shards" vs default ("workers",)
+    with pytest.raises(ValueError, match=r"mesh axes.*shards"):
+        SVC(mesh=mesh, shard="auto").fit(x, yb)
+    with pytest.raises(ValueError, match=r"mesh axes.*shards"):
+        SVR(mesh=mesh, shard="auto").fit(x, yy.astype(np.float32))
+    y3 = np.arange(len(yy)) % 3
+    with pytest.raises(ValueError, match=r"mesh axes.*shards"):
+        SVC(mesh=mesh, shard="task").fit(x, y3)
+
+
+@pytest.mark.requires_devices(2)
+def test_resolve_worker_count():
+    assert dist.resolve_worker_count(None, ("workers",)) == 1
+    mesh = make_shard_mesh(2)
+    assert dist.resolve_worker_count(mesh, ("shards",)) == 2
+    with pytest.raises(ValueError, match="worker axes"):
+        dist.resolve_worker_count(mesh, ("workers",))

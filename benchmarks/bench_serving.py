@@ -61,8 +61,8 @@ def main(quick: bool = False, engine: str = "chunked") -> None:
             "new_rps": batch / t_new,
             "speedup": t_old / t_new,
         }
-        if pred.n_programs >= 0:  # private jax API; absent -> omit
-            record["n_programs"] = int(pred.n_programs)
+        # predictor-owned program ledger (no more private jit API)
+        record["n_programs"] = int(pred.n_programs)
         common.emit_json(record)
 
 

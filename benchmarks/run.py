@@ -33,6 +33,15 @@ machine-consumable trajectory successive commits diff):
                                       engine serving, requests/s at
                                       batch {1, 32, 256}, JSON lines;
                                       --only serving)
+  beyond-paper  -> bench_serving_load (open-loop Poisson arrivals vs the
+                                      dynamic-batching service: p50/p99
+                                      latency + sustained requests/s per
+                                      offered rate, dynamic vs
+                                      per-request dispatch, plus the
+                                      fp16/bf16 quantization gate;
+                                      --only serving_load — --quick is
+                                      the CI smoke asserting the
+                                      speedup + accuracy gates)
   beyond-paper  -> bench_cascade     (hierarchical cascade training:
                                       wall clock / accuracy / KKT
                                       certificate vs shard count, JSON
@@ -83,8 +92,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="",
                     help="comma list: binary,multiclass,portability,"
                          "kernels; opt-in extras: large_n,approx,"
-                         "scheduler,sharded,svr,serving,tile_sweep,"
-                         "cascade")
+                         "scheduler,sharded,svr,serving,serving_load,"
+                         "tile_sweep,cascade")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -148,6 +157,12 @@ def main(argv=None) -> None:
         # opt-in: batched Predictor vs the per-call engine serving path
         from benchmarks import bench_serving
         _run_suite("serving", lambda: bench_serving.main(quick=args.quick))
+    if only is not None and "serving_load" in only:
+        # opt-in: open-loop Poisson load on the dynamic-batching service
+        # (asserts the batching speedup + quantization accuracy gates)
+        from benchmarks import bench_serving_load
+        _run_suite("serving_load",
+                   lambda: bench_serving_load.main(quick=args.quick))
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ Walks the deployment story end to end: train a multiclass SVC, compact
 it into a packed model artifact (versioned .npz — the only thing a
 serving host needs), reload it, and answer request batches through the
 jit-cached ``serve.Predictor``, reporting requests/s against the
-training-side per-call path.
+training-side per-call path. Then the under-load pieces: a quantized
+fp16 pack (schema v3, decision-delta checked), and the async
+``ServingService`` coalescing concurrent submitters into fused decides.
 """
 import os
 import sys
@@ -57,6 +59,28 @@ def main():
     acc = float(np.mean(pred.predict(x) == y))
     print(f"served accuracy: {acc:.3f} (bit-identical to training-side "
           f"predictions)")
+
+    # -- quantized SV bank: half the artifact + resident HBM, f32 accum
+    qpath = os.path.join(os.path.dirname(path), "iris-svc-fp16.npz")
+    serve.save(qpath, serve.pack(clf, sv_dtype="fp16"))
+    qpred = serve.Predictor(serve.load(qpath), engine="auto")
+    delta = float(np.max(np.abs(qpred.decision_values(x)
+                                - pred.decision_values(x))))
+    assert np.array_equal(qpred.predict(x), pred.predict(x))
+    print(f"fp16 pack: {os.path.getsize(qpath)} bytes (schema "
+          f"v{serve.SCHEMA_VERSION_QUANT}), max decision delta "
+          f"{delta:.2e}, label parity exact")
+
+    # -- async service: concurrent submitters, one fused decide per
+    #    batching window, futures scattered back per request
+    with serve.ServingService(packed, window_ms=2.0) as svc:
+        futs = [svc.submit(x[i:i + 1]) for i in range(64)]
+        got = np.concatenate([f.result() for f in futs])
+        assert np.array_equal(got, clf.predict(x[:64]))
+        s = svc.stats
+        print(f"service: {s['n_requests']} requests fused into "
+              f"{s['n_batches']} batches "
+              f"({s['rows_per_batch']:.1f} rows/batch)")
 
 
 if __name__ == "__main__":

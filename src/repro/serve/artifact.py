@@ -24,6 +24,17 @@ SV-bank models still write version 1 — old readers keep working — and
 low-rank models write version 2; ``load`` refuses unknown schema
 names/versions instead of guessing.
 
+Quantized SV banks (``pack(..., sv_dtype="fp16"|"bf16")`` or
+``quantize`` on an existing pack) store ``sv_x``/``sv_coef`` at half
+precision — half the artifact size and half the device-resident bank
+HBM — while biases, counts and routing stay exact. Serving upcasts the
+bank to f32 inside the decide program (f32 accumulation; see
+``serve.predictor``), and the accuracy cost is gated in tests (decision
+deltas <= 3e-2, label parity). Quantized packs write schema version 3
+(``meta.sv_dtype``; bf16 serializes as its uint16 bit pattern since npz
+has no bfloat16) — fp32 packs keep writing v1/v2 byte-identically, and
+``load`` reads all of v1/v2/v3.
+
 ``pack`` accepts a fitted ``SVC`` (binary or multiclass) or ``SVR`` and
 is duck-typed on the fitted attributes, so this module never imports
 the training stack.
@@ -35,6 +46,7 @@ import json
 import os
 from typing import NamedTuple, Optional
 
+import ml_dtypes
 import numpy as np
 
 from repro.core import kernels as K
@@ -42,7 +54,13 @@ from repro.core import kernels as K
 SCHEMA_NAME = "repro.svm-pack"
 SCHEMA_VERSION = 2                  # current writer for low-rank packs
 SCHEMA_VERSION_CLASSIC = 1          # SV-bank packs stay readable by old code
-SCHEMA_VERSIONS = (1, 2)            # what load() accepts
+SCHEMA_VERSION_QUANT = 3            # quantized (fp16/bf16) SV-bank packs
+SCHEMA_VERSIONS = (1, 2, 3)         # what load() accepts
+
+# storage dtypes for the SV bank (sv_x / sv_coef); ml_dtypes registers
+# bfloat16 as a numpy dtype (it ships with jax, no new dependency)
+SV_DTYPES = {"fp32": np.float32, "fp16": np.float16,
+             "bf16": ml_dtypes.bfloat16}
 
 
 class TaskBucket(NamedTuple):
@@ -100,9 +118,19 @@ class PackedModel:
     feature_map: Optional[LowRankMap] = None
     linear_w: Optional[np.ndarray] = None   # (n_tasks, rank)
     linear_b: Optional[np.ndarray] = None   # (n_tasks,)
+    sv_dtype: str = "fp32"                  # sv_x/sv_coef storage dtype
 
     def __post_init__(self):
+        if self.sv_dtype not in SV_DTYPES:
+            raise ValueError(
+                f"unknown sv_dtype {self.sv_dtype!r}; expected one of "
+                f"{sorted(SV_DTYPES)}")
         if self.feature_map is not None:
+            if self.sv_dtype != "fp32":
+                raise ValueError(
+                    "sv_dtype quantization applies to SV banks; a "
+                    "low-rank pack has no SV bank (its artifact is "
+                    "already O(rank))")
             if self.buckets:
                 raise ValueError("a low-rank pack carries linear weights, "
                                  "not SV buckets; got both")
@@ -214,17 +242,49 @@ def _pack_lowrank(model) -> PackedModel:
         linear_b=np.asarray(bias, np.float32))
 
 
-def pack(model) -> PackedModel:
-    """Compact a fitted ``SVC``/``SVR`` into an immutable PackedModel."""
+def quantize(model: PackedModel, sv_dtype: str) -> PackedModel:
+    """Re-store an SV-bank pack's ``sv_x``/``sv_coef`` at ``sv_dtype``
+    ("fp32" | "fp16" | "bf16"). Biases, counts and routing stay f32 /
+    exact; serving upcasts the bank to f32 inside the decide program.
+    Quantizing an already-quantized pack re-rounds from the stored
+    values (lossless when widening is impossible — keep the fp32 pack
+    if you may need it back)."""
+    if sv_dtype not in SV_DTYPES:
+        raise ValueError(f"unknown sv_dtype {sv_dtype!r}; expected one "
+                         f"of {sorted(SV_DTYPES)}")
+    if model.feature_map is not None:
+        raise ValueError("sv_dtype quantization applies to SV banks; a "
+                         "low-rank pack has no SV bank")
+    if sv_dtype == model.sv_dtype:
+        return model
+    dt = SV_DTYPES[sv_dtype]
+    buckets = tuple(
+        g._replace(sv_x=np.asarray(g.sv_x, dt),
+                   sv_coef=np.asarray(g.sv_coef, dt))
+        for g in model.buckets)
+    return dataclasses.replace(model, buckets=buckets, sv_dtype=sv_dtype)
+
+
+def pack(model, *, sv_dtype: str = "fp32") -> PackedModel:
+    """Compact a fitted ``SVC``/``SVR`` into an immutable PackedModel.
+
+    ``sv_dtype`` ("fp32" default, "fp16" | "bf16") quantizes the stored
+    SV bank — see ``quantize``. Low-rank fits reject quantization."""
     if not getattr(model, "_fitted", False):
         raise ValueError("pack() needs a fitted model (call .fit first)")
     if getattr(model, "_feature_map", None) is not None:
-        return _pack_lowrank(model)
+        packed = _pack_lowrank(model)
+        if sv_dtype != "fp32":
+            raise ValueError("sv_dtype quantization applies to SV "
+                             "banks; a low-rank fit packs no SV bank")
+        return packed
     if hasattr(model, "beta_"):
-        return _pack_svr(model)
-    if model._binary:
-        return _pack_binary_svc(model)
-    return _pack_multiclass_svc(model)
+        packed = _pack_svr(model)
+    elif model._binary:
+        packed = _pack_binary_svc(model)
+    else:
+        packed = _pack_multiclass_svc(model)
+    return quantize(packed, sv_dtype) if sv_dtype != "fp32" else packed
 
 
 # ------------------------------------------------------------------ (de)ser
@@ -236,11 +296,15 @@ def save(path, model: PackedModel) -> None:
     ``save(p)`` / ``load(p)`` round-trip always works.
     """
     lowrank = model.feature_map is not None
+    quant = model.sv_dtype != "fp32"
+    # classic fp32 SV-bank packs keep writing version 1 so pre-low-rank
+    # readers stay compatible; low-rank needs version 2, quantized
+    # banks version 3 (old readers must refuse, not misread the bank)
+    version = (SCHEMA_VERSION_QUANT if quant
+               else SCHEMA_VERSION if lowrank else SCHEMA_VERSION_CLASSIC)
     meta = {
         "schema": SCHEMA_NAME,
-        # classic SV-bank packs keep writing version 1 so pre-low-rank
-        # readers stay compatible; only low-rank packs need version 2
-        "version": SCHEMA_VERSION if lowrank else SCHEMA_VERSION_CLASSIC,
+        "version": version,
         "kind": model.kind, "strategy": model.strategy,
         "decision": model.decision,
         "kernel": dataclasses.asdict(model.kernel),
@@ -249,6 +313,8 @@ def save(path, model: PackedModel) -> None:
     }
     if lowrank:
         meta["feature_map"] = model.feature_map.kind
+    if quant:
+        meta["sv_dtype"] = model.sv_dtype
     arrays = {"meta": np.array(json.dumps(meta, sort_keys=True))}
     if model.classes is not None:
         arrays["classes"] = model.classes
@@ -261,6 +327,10 @@ def save(path, model: PackedModel) -> None:
         arrays["linear_b"] = model.linear_b
     for i, g in enumerate(model.buckets):
         for field, value in g._asdict().items():
+            if value.dtype == ml_dtypes.bfloat16:
+                # npz has no bfloat16: store the raw bit pattern;
+                # load() views it back (meta.sv_dtype says how)
+                value = value.view(np.uint16)
             arrays[f"b{i}_{field}"] = value
     if hasattr(path, "write"):
         np.savez(path, **arrays)
@@ -280,8 +350,20 @@ def load(path) -> PackedModel:
             raise ValueError(
                 f"unsupported {SCHEMA_NAME} version {meta.get('version')!r}"
                 f" (this build reads versions {list(SCHEMA_VERSIONS)})")
+        sv_dtype = meta.get("sv_dtype", "fp32")
+        if sv_dtype not in SV_DTYPES:
+            raise ValueError(f"unsupported sv_dtype {sv_dtype!r} "
+                             f"(this build reads {sorted(SV_DTYPES)})")
+
+        def _bank(arr):
+            # bf16 banks are stored as their uint16 bit pattern
+            return (arr.view(ml_dtypes.bfloat16) if sv_dtype == "bf16"
+                    else arr)
+
         buckets = tuple(
-            TaskBucket(**{f: z[f"b{i}_{f}"] for f in TaskBucket._fields})
+            TaskBucket(**{f: _bank(z[f"b{i}_{f}"])
+                          if f in ("sv_x", "sv_coef") else z[f"b{i}_{f}"]
+                          for f in TaskBucket._fields})
             for i in range(meta["n_buckets"]))
         fm = w = lb = None
         if "feature_map" in meta:
@@ -297,4 +379,5 @@ def load(path) -> PackedModel:
             decision=meta["decision"],
             classes=z["classes"] if "classes" in z else None,
             pairs=np.asarray(z["pairs"], np.int64) if "pairs" in z
-            else None, feature_map=fm, linear_w=w, linear_b=lb)
+            else None, feature_map=fm, linear_w=w, linear_b=lb,
+            sv_dtype=sv_dtype)

@@ -24,6 +24,19 @@ padded SV rows carry ``coef == 0``, so padding never changes a served
 value. Width-0 banks (the empty-SV degenerate model) serve the constant
 bias, matching the training-side behavior.
 
+Quantized packs (``artifact.pack(..., sv_dtype="fp16"|"bf16")``) keep
+their SV banks device-resident AT the storage dtype — half the bank
+HBM — and every decide program upcasts the bank tiles to f32 before the
+cross-Gram contraction, so accumulation is always f32 regardless of how
+the bank is stored. fp32 packs are bit-identical to pre-quantization
+serving (the upcast is a no-op).
+
+``decision_values`` is thread-safe: concurrent callers each own their
+output buffer, jit dispatch is safe under concurrency, and the served-
+row counter / compiled-program ledger are guarded by a lock — the
+dynamic-batching service (``serve.service``) and its submitters may
+share one predictor freely.
+
 Low-rank packs (``PackedModel.feature_map`` set) skip the SV-bank
 machinery entirely: the feature-map arrays and the stacked linear
 weights stay resident, and every batch is one jitted transform +
@@ -37,6 +50,7 @@ training-set size.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 import jax
@@ -52,11 +66,19 @@ def serving_config(engine: str | KE.EngineConfig) -> KE.EngineConfig:
     """Resolve an engine choice into the serving-side config: serving
     never needs the (sv, sv) training Gram nor the LRU row cache, so
     dense/auto/sharded degrade to chunked; an explicit pallas choice is
-    honored."""
+    honored. Training-only fields that reference the TRAINING host's
+    topology are stripped — in particular ``shard_axis``: a
+    sharded-trained model must pack to a config that cannot name a mesh
+    axis the serving host does not have."""
     cfg = (engine if isinstance(engine, KE.EngineConfig)
            else KE.EngineConfig(backend=engine))
     backend = "pallas" if cfg.backend == "pallas" else "chunked"
-    return dataclasses.replace(cfg, backend=backend, cache_slots=0)
+    return dataclasses.replace(cfg, backend=backend, cache_slots=0,
+                               shard_axis=None)
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (int(n).bit_length() - 1)
 
 
 class Predictor:
@@ -68,7 +90,13 @@ class Predictor:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.model = model
-        self.max_batch = int(max_batch)
+        # max_batch is a rung on the pow2 padding ladder, not a free
+        # integer: an off-ladder cap (say 1000) would pad 600-row
+        # requests to a 1000-row program shape — one silently compiled
+        # extra executable per such size class. Round DOWN to the
+        # largest pow2 <= max_batch so the cap itself is on-ladder and
+        # never exceeds what the caller asked for.
+        self.max_batch = _pow2_floor(max_batch)
         self.engine_cfg = serving_config(engine)
         # SV banks move to device once and stay resident; task_ids stay
         # host-side (they only scatter results back into request order)
@@ -98,10 +126,20 @@ class Predictor:
         # (bucket shape, batch bucket) argument signature
         self._decide = jax.jit(self._decide_stack)
         self.n_requests = 0  # rows served (warmup excluded)
+        # predictor-owned ledger of distinct (bank signature, batch
+        # bucket) program shapes — what n_programs reports; jax's
+        # private jit cache introspection moved across versions
+        self._program_sigs: set = set()
+        self._lock = threading.Lock()
 
     # ---------------------------------------------------------- programs
     def _decide_stack(self, sv_x, sv_coef, b, z):
         """(T, w, d) stacked bank x (B, d) batch -> (T, B) decisions."""
+        # quantized banks (fp16/bf16 packs) upcast to f32 here, inside
+        # the program, so the contraction accumulates in f32 while the
+        # resident bank stays at the storage dtype; a no-op for fp32
+        sv_x = sv_x.astype(jnp.float32)
+        sv_coef = sv_coef.astype(jnp.float32)
         kp = self.model.kernel
         if self.engine_cfg.backend == "pallas" and kp.name == "rbf":
             return ops.multitask_decision(
@@ -115,24 +153,27 @@ class Predictor:
 
     @property
     def n_programs(self) -> int:
-        """Compiled decide-program count (the jit cache size)."""
-        try:
-            return int(self._decide._cache_size())
-        except AttributeError:  # pragma: no cover - older/newer jax
-            return -1
+        """Compiled decide-program count: distinct (bank shape/dtype,
+        batch bucket) signatures served so far. Owned by the predictor
+        — it used to read the private ``jit._cache_size()``, which
+        moved across jax versions and returned -1 when absent."""
+        return len(self._program_sigs)
 
     def _batch_bucket(self, t: int) -> int:
         return min(self.max_batch, 1 << (max(t, 1) - 1).bit_length())
 
     def warmup(self, batch_sizes=(1,)) -> "Predictor":
-        """Pre-compile the decide programs for the given request sizes.
+        """Pre-compile the decide programs AND the decode (label) path
+        for the given request sizes.
 
         Warmup rows are synthetic and do NOT count toward
         ``n_requests`` (the served-row counter)."""
         d = self.model.n_features
         served = self.n_requests
         for t in batch_sizes:
-            self.decision_values(np.zeros((int(t), d), np.float32))
+            # predict() runs decision_values + decode, warming both the
+            # decide program and the vote/argmax ops at this bucket
+            self.predict(np.zeros((int(t), d), np.float32))
         self.n_requests = served
         return self
 
@@ -146,6 +187,7 @@ class Predictor:
                 f"got shape {xt.shape}")
         nt = xt.shape[0]
         out = np.empty((self.model.n_tasks, nt), np.float32)
+        sigs = []
         for start in range(0, nt, self.max_batch):
             stop = min(start + self.max_batch, nt)
             bucket = self._batch_bucket(stop - start)
@@ -157,6 +199,7 @@ class Predictor:
                 w, lb = self._linear
                 df = self._decide_lowrank(a, fb, w, lb, zj)
                 out[:, start:stop] = np.asarray(df)[:, :stop - start]
+                sigs.append(("lowrank", bucket))
                 continue
             for sv_x, sv_coef, b, task_ids in self._banks:
                 if sv_x.shape[1] == 0:  # empty-SV bank: constant bias
@@ -165,24 +208,56 @@ class Predictor:
                 df = self._decide(sv_x, sv_coef, b, zj)
                 out[task_ids, start:stop] = np.asarray(
                     df)[:, :stop - start]
-        self.n_requests += nt
+                sigs.append((sv_x.shape, str(sv_x.dtype), bucket))
+        with self._lock:
+            self._program_sigs.update(sigs)
+            self.n_requests += nt
         return out
+
+    def decode(self, df: np.ndarray, op: str = "predict") -> np.ndarray:
+        """Post-process stacked decision values ``df (n_tasks, nt)``
+        into the requested output — the per-model decode step the
+        dynamic-batching service shares across every request of a fused
+        batch (compute ``decision_values`` once, decode column slices
+        per request).
+
+        op: "values" (the stacked df, unchanged), "decision_function"
+        (margins, sklearn orientation) or "predict" (labels / SVR
+        values)."""
+        m = self.model
+        if op == "values":
+            return df
+        if op == "decision_function":
+            return df[0] if m.strategy in ("binary", "svr") else df
+        if op != "predict":
+            raise ValueError(f"unknown decode op {op!r}; expected "
+                             "'predict', 'decision_function' or 'values'")
+        if m.kind == "svr":
+            return df[0]
+        if m.strategy == "binary":
+            return m.classes[(df[0] > 0).astype(np.int64)]
+        # pad the vote/argmax decode onto the same pow2 ladder as the
+        # decide programs: its eager jnp ops compile per distinct width,
+        # so decoding at the raw width would grow the compile cache one
+        # entry per odd request size (a multi-hundred-ms stall apiece
+        # under open-loop traffic). Padded columns (df == 0) are decoded
+        # and discarded — the decision is columnwise.
+        nt = df.shape[1]
+        bucket = 1 << max(nt - 1, 0).bit_length()
+        if bucket > nt:
+            dfp = np.zeros((df.shape[0], bucket), np.float32)
+            dfp[:, :nt] = df
+            df = dfp
+        idx = MC.decide_from_pairs(jnp.asarray(df), m.pairs, m.n_classes,
+                                   m.strategy, m.decision)
+        return m.classes[np.asarray(idx)[:nt]]
 
     def decision_function(self, xt: np.ndarray) -> np.ndarray:
         """Margins in the training-side convention: (nt,) for binary
         SVC and SVR (positive margin => ``classes[1]``), (n_tasks, nt)
         stacked for multiclass."""
-        df = self.decision_values(xt)
-        return df[0] if self.model.strategy in ("binary", "svr") else df
+        return self.decode(self.decision_values(xt), "decision_function")
 
     def predict(self, xt: np.ndarray) -> np.ndarray:
         """Class labels (SVC) or regression values (SVR)."""
-        df = self.decision_values(xt)
-        m = self.model
-        if m.kind == "svr":
-            return df[0]
-        if m.strategy == "binary":
-            return m.classes[(df[0] > 0).astype(np.int64)]
-        idx = MC.decide_from_pairs(jnp.asarray(df), m.pairs, m.n_classes,
-                                   m.strategy, m.decision)
-        return m.classes[np.asarray(idx)]
+        return self.decode(self.decision_values(xt), "predict")

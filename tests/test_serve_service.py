@@ -1,0 +1,394 @@
+"""Service-layer contracts: dynamic batching, the model registry, SV-bank
+quantization, and predictor thread-safety.
+
+What PR 9 pins down:
+
+* ``ServingService`` answers are EXACTLY what the underlying predictor
+  would serve for the same rows — batching merges requests into one
+  fused decide, and the scatter-back never mixes rows up, for any mix
+  of ops, models and row counts;
+* ``ModelRegistry`` eviction drops device residency but never changes
+  served values: evict + re-admit is bit-identical (same pack, same
+  programs);
+* quantized packs (``sv_dtype="fp16"|"bf16"``) roundtrip through the
+  v3 schema, stay within the accuracy gate (decision delta <= 3e-2
+  against the fp32 pack) and keep label parity — while v1/v2 artifacts
+  keep loading;
+* concurrent ``decision_values`` callers on ONE predictor get exactly
+  the values a serial caller gets, and the served-row counter stays
+  exact.
+"""
+import io
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.core.svm import SVC, SVR
+from repro.data.synth import (make_blobs, make_imbalanced_blobs,
+                              make_synth_regression)
+
+QUANT_GATE = 3e-2        # max decision-value delta vs the fp32 pack
+
+
+@pytest.fixture(scope="module")
+def binary_problem():
+    x, y = make_blobs(30, 2, 4, sep=3.0, seed=0)
+    return x, y, SVC(solver="smo", gamma=0.5).fit(x, y)
+
+
+@pytest.fixture(scope="module")
+def ovo_problem():
+    x, y = make_imbalanced_blobs([40, 25, 12, 9], 4, sep=3.0, seed=1)
+    return x, y, SVC(solver="smo", gamma=0.5).fit(x, y)
+
+
+@pytest.fixture(scope="module")
+def svr_problem():
+    x, y = make_synth_regression(60, 5, seed=2)
+    return x, y, SVR(solver="smo", gamma=0.5, epsilon=0.05).fit(x, y)
+
+
+# ---------------------------------------------------------------- service
+def test_service_matches_predictor_outputs(ovo_problem):
+    x, _, model = ovo_problem
+    packed = serve.pack(model)
+    pred = serve.Predictor(packed, engine="chunked").warmup((1, 8, 32))
+    with serve.ServingService(packed, engine="chunked",
+                              window_ms=5.0) as svc:
+        futs = [(svc.submit(x[i:i + 3], op="predict"), "predict", i, 3)
+                for i in range(0, 24, 3)]
+        futs += [(svc.submit(x[i], op="decision_function"),
+                  "decision_function", i, 1) for i in range(24, 30)]
+        futs += [(svc.submit(x[i:i + 2], op="values"), "values", i, 2)
+                 for i in range(30, 40, 2)]
+        for fut, op, i, n in futs:
+            got = fut.result(timeout=30)
+            want = pred.decode(pred.decision_values(x[i:i + n]), op)
+            if op == "predict":
+                np.testing.assert_array_equal(got, want)
+            else:
+                # the merged batch pads to a different bucket than the
+                # per-slice reference: multi-task chunked values may
+                # move a few ulp (documented in tests/test_serving.py)
+                np.testing.assert_array_almost_equal_nulp(got, want,
+                                                          nulp=8)
+
+
+def test_service_batches_a_burst(binary_problem):
+    x, _, model = binary_problem
+    svc = serve.ServingService(serve.pack(model), engine="chunked",
+                               window_ms=50.0)
+    try:
+        svc.predict(x[:1])                       # warm the programs
+        futs = [svc.submit(x[i]) for i in range(20)]
+        for f in futs:
+            f.result(timeout=30)
+        s = svc.stats
+        assert s["n_requests"] == 21 and s["n_rows"] == 21
+        # the burst of 20 coalesced into far fewer fused decides
+        assert s["n_batches"] <= 1 + 4
+        assert s["max_batch_rows"] >= 8
+    finally:
+        svc.close()
+
+
+def test_service_flushes_when_bucket_fills(binary_problem):
+    """A full max_batch window must dispatch immediately, not wait out
+    the (long) batching window."""
+    x, _, model = binary_problem
+    svc = serve.ServingService(serve.pack(model), engine="chunked",
+                               window_ms=10_000.0, max_batch=8)
+    try:
+        svc.predict(x[:8])                       # warm
+        t0 = time.perf_counter()
+        futs = [svc.submit(x[i]) for i in range(8)]
+        for f in futs:
+            f.result(timeout=30)
+        assert time.perf_counter() - t0 < 5.0    # not the 10s window
+        assert svc.stats["n_full_flushes"] >= 1
+    finally:
+        svc.close()
+
+
+def test_service_multi_model_routing(binary_problem, svr_problem):
+    xc, _, clf = binary_problem
+    xr, _, reg_model = svr_problem
+    models = {"clf": serve.pack(clf), "reg": serve.pack(reg_model)}
+    with serve.ServingService(models, engine="chunked",
+                              window_ms=5.0) as svc:
+        fc = [svc.submit(xc[i], model="clf") for i in range(8)]
+        fr = [svc.submit(xr[i], model="reg") for i in range(8)]
+        got_c = np.concatenate([f.result(timeout=30) for f in fc])
+        got_r = np.concatenate([f.result(timeout=30) for f in fr])
+    np.testing.assert_array_equal(got_c, clf.predict(xc[:8]))
+    np.testing.assert_array_equal(got_r, reg_model.predict(xr[:8]))
+
+
+def test_service_submit_validation(binary_problem):
+    x, _, model = binary_problem
+    with serve.ServingService(serve.pack(model), engine="chunked",
+                              window_ms=0.0) as svc:
+        with pytest.raises(KeyError, match="unknown model"):
+            svc.submit(x[:2], model="nope")
+        with pytest.raises(ValueError, match="op"):
+            svc.submit(x[:2], op="proba")
+        with pytest.raises(ValueError, match="request"):
+            svc.submit(np.zeros((2, 9), np.float32))
+        with pytest.raises(ValueError, match="request"):
+            svc.submit(np.zeros((0, x.shape[1]), np.float32))
+        with pytest.raises(ValueError, match="window_ms"):
+            serve.ServingService(serve.pack(model), window_ms=-1)
+
+
+def test_service_close_flushes_and_rejects(binary_problem):
+    x, _, model = binary_problem
+    svc = serve.ServingService(serve.pack(model), engine="chunked",
+                               window_ms=200.0)
+    futs = [svc.submit(x[i]) for i in range(5)]
+    svc.close()                      # mid-window: must flush, not drop
+    got = np.concatenate([f.result(timeout=30) for f in futs])
+    np.testing.assert_array_equal(got, model.predict(x[:5]))
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(x[:1])
+    svc.close()                      # idempotent
+
+
+def test_service_over_existing_predictor(binary_problem):
+    x, _, model = binary_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    with serve.ServingService(pred, window_ms=1.0) as svc:
+        np.testing.assert_array_equal(svc.predict(x[:7]),
+                                      model.predict(x[:7]))
+    assert pred.n_requests >= 7      # served through the shared predictor
+
+
+def test_service_concurrent_submitters(ovo_problem):
+    """Many submitter threads, one batcher: every future resolves to
+    exactly its own rows' outputs."""
+    x, _, model = ovo_problem
+    want = model.predict(x)
+    with serve.ServingService(serve.pack(model), engine="chunked",
+                              window_ms=2.0) as svc:
+        def one(i):
+            j = i % (len(x) - 4)
+            return j, svc.submit(x[j:j + 4]).result(timeout=60)
+
+        with ThreadPoolExecutor(max_workers=8) as ex:
+            for j, got in ex.map(one, range(64)):
+                np.testing.assert_array_equal(got, want[j:j + 4])
+
+
+# --------------------------------------------------------------- registry
+def test_registry_lru_eviction_and_readmission(binary_problem,
+                                               ovo_problem):
+    xa, _, ma = binary_problem
+    xb, _, mb = ovo_problem
+    reg = serve.ModelRegistry(max_resident=2, engine="chunked",
+                              warmup_sizes=(4,))
+    reg.register("a", serve.pack(ma))
+    reg.register("b", serve.pack(mb))
+    reg.register("c", serve.pack(ma, sv_dtype="fp16"))
+    va = reg.get("a").decision_values(xa[:4])
+    reg.get("b")
+    assert reg.resident == ("a", "b")
+    reg.get("a")                              # refresh recency
+    assert reg.resident == ("b", "a")
+    reg.get("c")                              # evicts b (LRU), not a
+    assert reg.resident == ("a", "c")
+    assert reg.stats == {"hits": 1, "admissions": 3, "evictions": 1}
+    # the satellite contract: evict + re-admit serves bit-identical
+    # values (host pack unchanged, same programs)
+    reg.get("b")                              # evicts a
+    assert "a" not in reg.resident
+    va2 = reg.get("a").decision_values(xa[:4])
+    np.testing.assert_array_equal(va, va2)
+
+
+def test_registry_explicit_evict_and_unregister(binary_problem):
+    _, _, model = binary_problem
+    reg = serve.ModelRegistry(max_resident=2, engine="chunked")
+    reg.register("m", serve.pack(model))
+    assert reg.evict("m") is False            # never admitted
+    reg.get("m")
+    assert reg.evict("m") is True and reg.resident == ()
+    assert "m" in reg and len(reg) == 1       # host arrays survive
+    reg.unregister("m")
+    assert "m" not in reg
+    with pytest.raises(KeyError, match="not registered"):
+        reg.get("m")
+    with pytest.raises(ValueError, match="max_resident"):
+        serve.ModelRegistry(max_resident=0)
+
+
+def test_registry_register_replace_and_path(binary_problem, tmp_path):
+    x, y, model = binary_problem
+    path = tmp_path / "m.npz"
+    serve.save(path, serve.pack(model))
+    reg = serve.ModelRegistry(engine="chunked")
+    reg.register("m", path)                   # path form loads
+    first = reg.get("m")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("m", serve.pack(model))
+    reg.register("m", serve.pack(model), replace=True)
+    assert reg.resident == ()                 # replace evicts residency
+    assert reg.get("m") is not first
+
+
+def test_registry_thread_safe_admission(binary_problem):
+    x, _, model = binary_problem
+    reg = serve.ModelRegistry(max_resident=1, engine="chunked",
+                              warmup_sizes=())
+    reg.register("m", serve.pack(model))
+    preds = []
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        preds = list(ex.map(lambda _: reg.get("m"), range(32)))
+    assert all(p is preds[0] for p in preds)  # admitted exactly once
+    assert reg.stats["admissions"] == 1
+
+
+# ----------------------------------------------------------- quantization
+@pytest.mark.parametrize("sv_dtype", ["fp16", "bf16"])
+@pytest.mark.parametrize("prob", ["binary_problem", "ovo_problem",
+                                  "svr_problem"])
+def test_quantized_pack_accuracy_gate(sv_dtype, prob, request):
+    x, _, model = request.getfixturevalue(prob)
+    full = serve.Predictor(serve.pack(model), engine="chunked")
+    quant = serve.Predictor(serve.pack(model, sv_dtype=sv_dtype),
+                            engine="chunked")
+    df_full = full.decision_values(x)
+    df_quant = quant.decision_values(x)
+    assert np.max(np.abs(df_quant - df_full)) <= QUANT_GATE
+    if isinstance(model, SVR):
+        assert np.max(np.abs(quant.predict(x) - full.predict(x))) \
+            <= QUANT_GATE
+    else:
+        np.testing.assert_array_equal(quant.predict(x), full.predict(x))
+
+
+@pytest.mark.parametrize("sv_dtype", ["fp16", "bf16"])
+def test_quantized_pack_schema_v3_roundtrip(ovo_problem, sv_dtype,
+                                            tmp_path):
+    x, _, model = ovo_problem
+    packed = serve.pack(model, sv_dtype=sv_dtype)
+    assert packed.sv_dtype == sv_dtype
+    want_dt = serve.SV_DTYPES[sv_dtype]
+    assert all(g.sv_x.dtype == want_dt and g.sv_coef.dtype == want_dt
+               for g in packed.buckets)
+    path = tmp_path / "q.npz"
+    serve.save(path, packed)
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta"]))
+    assert meta["version"] == serve.SCHEMA_VERSION_QUANT == 3
+    assert meta["sv_dtype"] == sv_dtype
+    loaded = serve.load(path)
+    assert loaded.sv_dtype == sv_dtype
+    for got, ref in zip(loaded.buckets, packed.buckets):
+        assert got.sv_x.dtype == want_dt
+        np.testing.assert_array_equal(
+            np.asarray(got.sv_x, np.float32),
+            np.asarray(ref.sv_x, np.float32))
+        np.testing.assert_array_equal(got.b, ref.b)      # bias stays f32
+        assert got.b.dtype == np.float32
+    # served values identical pre/post roundtrip
+    np.testing.assert_array_equal(
+        serve.Predictor(loaded, engine="chunked").decision_values(x[:16]),
+        serve.Predictor(packed, engine="chunked").decision_values(x[:16]))
+
+
+def test_quantized_pack_serves_on_pallas(binary_problem):
+    x, _, model = binary_problem
+    full = serve.Predictor(serve.pack(model), engine="pallas")
+    quant = serve.Predictor(serve.pack(model, sv_dtype="bf16"),
+                            engine="pallas")
+    delta = np.max(np.abs(quant.decision_values(x[:32])
+                          - full.decision_values(x[:32])))
+    assert delta <= QUANT_GATE
+    np.testing.assert_array_equal(quant.predict(x[:32]),
+                                  full.predict(x[:32]))
+
+
+def test_fp32_pack_still_writes_v1(binary_problem):
+    """Quantization must not bump unquantized writers: fp32 SV-bank
+    packs keep schema v1 (old readers), low-rank keeps v2."""
+    _, _, model = binary_problem
+    buf = io.BytesIO()
+    serve.save(buf, serve.pack(model))
+    buf.seek(0)
+    with np.load(buf, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta"]))
+    assert meta["version"] == 1 and "sv_dtype" not in meta
+    buf.seek(0)
+    assert serve.load(buf).sv_dtype == "fp32"
+
+
+def test_lowrank_pack_rejects_quantization():
+    x, y = make_blobs(40, 2, 6, sep=3.0, seed=7)
+    clf = SVC(engine="rff", rank=32, gamma=0.5).fit(x, y)
+    with pytest.raises(ValueError, match="low-rank"):
+        serve.pack(clf, sv_dtype="fp16")
+    # and the v2 low-rank schema still roundtrips
+    buf = io.BytesIO()
+    serve.save(buf, serve.pack(clf))
+    buf.seek(0)
+    loaded = serve.load(buf)
+    assert loaded.feature_map is not None and loaded.sv_dtype == "fp32"
+
+
+def test_quantize_helper_and_validation(binary_problem):
+    _, _, model = binary_problem
+    packed = serve.pack(model)
+    q = serve.quantize(packed, "fp16")
+    assert q.sv_dtype == "fp16" and packed.sv_dtype == "fp32"
+    assert serve.quantize(q, "fp16") is q            # no-op re-quantize
+    with pytest.raises(ValueError, match="sv_dtype"):
+        serve.quantize(packed, "int8")
+    with pytest.raises(ValueError, match="sv_dtype"):
+        serve.pack(model, sv_dtype="fp64")
+
+
+# ---------------------------------------------------------- thread safety
+def test_predictor_concurrent_decision_values(ovo_problem):
+    """Concurrent callers must not corrupt n_requests nor interleave
+    partially-written outputs: every thread's values match the serial
+    reference exactly, and the served-row counter is the exact total."""
+    x, _, model = ovo_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    pred.warmup(batch_sizes=(4, 16))
+    slices = [(i % 40, 4 + (i % 3) * 12) for i in range(48)]
+    want = {(s, n): pred.decision_values(x[s:s + n]) for s, n in
+            set(slices)}
+    served0 = pred.n_requests
+    barrier = threading.Barrier(8)
+    errors = []
+
+    def worker(idx):
+        try:
+            barrier.wait(timeout=30)
+            for k in range(idx, len(slices), 8):
+                s, n = slices[k]
+                np.testing.assert_array_equal(
+                    pred.decision_values(x[s:s + n]), want[(s, n)])
+        except Exception as e:                       # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+    assert pred.n_requests == served0 + sum(n for _, n in slices)
+
+
+def test_predictor_decode_validates_op(binary_problem):
+    _, _, model = binary_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    df = pred.decision_values(np.zeros((2, 4), np.float32))
+    with pytest.raises(ValueError, match="op"):
+        pred.decode(df, "proba")

@@ -261,9 +261,7 @@ def test_predictor_program_cache_is_batch_bucketed(ovo_problem):
     pred = serve.Predictor(serve.pack(model), engine="chunked")
     pred.warmup(batch_sizes=(32,))
     n0 = pred.n_programs
-    if n0 < 0:
-        pytest.skip("jit cache size not exposed on this jax version")
-    assert n0 > 0
+    assert n0 == len(model._serving_buckets)
     # every batch size in (16, 32] hits the warm 32-bucket programs
     for nt in (17, 25, 32):
         pred.decision_values(x[:nt])
@@ -271,6 +269,45 @@ def test_predictor_program_cache_is_batch_bucketed(ovo_problem):
     # a new batch bucket compiles exactly one more program per SV bucket
     pred.decision_values(x[:4])
     assert pred.n_programs == n0 + len(model._serving_buckets)
+
+
+def test_max_batch_rounds_down_to_pow2(binary_problem):
+    """An off-ladder max_batch must not mint off-ladder program shapes:
+    max_batch=1000 used to pad 600-row requests to a 1000-row program
+    instead of a capped pow2 — one silent extra executable per such
+    size class. The cap now rounds DOWN to a pow2 at construction."""
+    x, _, model = binary_problem
+    packed = serve.pack(model)
+    pred = serve.Predictor(packed, engine="chunked", max_batch=1000)
+    assert pred.max_batch == 512
+    # already-pow2 caps are untouched
+    assert serve.Predictor(packed, max_batch=256).max_batch == 256
+    assert serve.Predictor(packed, max_batch=1).max_batch == 1
+    # a 600-row request slices at 512 then buckets the 88-row tail to
+    # 128 — exactly two on-ladder programs, nothing at width 1000/600
+    xt = np.tile(np.asarray(x, np.float32), (600 // len(x) + 1, 1))[:600]
+    df = pred.decision_values(xt)
+    assert pred.n_programs == 2
+    whole = serve.Predictor(packed, engine="chunked")
+    np.testing.assert_array_almost_equal_nulp(
+        df, whole.decision_values(xt), nulp=4)
+
+
+def test_serving_config_strips_training_only_fields():
+    """A sharded-trained engine config must pack to a serving config
+    that cannot reference the training mesh axis (the serving host has
+    no such axis); the LRU row cache is training-side too."""
+    from repro.core import kernel_engine as KE
+    cfg = KE.EngineConfig(backend="sharded", shard_axis="shards",
+                          cache_slots=16)
+    scfg = serve.serving_config(cfg)
+    assert scfg.backend == "chunked"
+    assert scfg.shard_axis is None
+    assert scfg.cache_slots == 0
+    # explicit pallas survives, but its shard_axis is still stripped
+    scfg = serve.serving_config(
+        KE.EngineConfig(backend="pallas", shard_axis="w"))
+    assert scfg.backend == "pallas" and scfg.shard_axis is None
 
 
 def test_predictor_rejects_bad_requests(binary_problem):

@@ -30,6 +30,7 @@ Run via ``python -m benchmarks.run --only serving_load``.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import time
@@ -48,6 +49,11 @@ QUANT_GATE = 3e-2          # max |fp16/bf16 - fp32| decision delta
 # offered rates as multiples of the measured per-request capacity: one
 # comfortably under, one at the knee, one past saturation
 RATE_FACTORS = (0.5, 1.5, 4.0)
+# REPRO_COMPILE_GUARD=1 (CI sets it on the smoke) wraps every measured
+# replay in a zero-budget CompileGuard: the full pow2 ladder is warmed
+# before the clock starts, so ANY fresh XLA compile mid-replay is a
+# shape-keyed cache leak poisoning the tail latencies it reports
+COMPILE_GUARD = os.environ.get("REPRO_COMPILE_GUARD") == "1"
 
 
 class _PerRequestServer:
@@ -126,6 +132,14 @@ def _replay(submit, schedule, pool: np.ndarray) -> dict:
     }
 
 
+def _guarded_replay(submit, schedule, pool, note: str) -> dict:
+    if not COMPILE_GUARD:
+        return _replay(submit, schedule, pool)
+    from repro.analysis.compile_guard import CompileGuard
+    with CompileGuard(budget=0, note=note):
+        return _replay(submit, schedule, pool)
+
+
 def _run_mode(mode: str, packed, pool, schedule) -> dict:
     # warm the ENTIRE pow2 batch-bucket ladder first: a bucket first
     # seen mid-replay would pay its jit compile inside the measured
@@ -137,7 +151,8 @@ def _run_mode(mode: str, packed, pool, schedule) -> dict:
         pred.warmup(tuple(1 << k for k in
                           range(pred.max_batch.bit_length())))
         try:
-            out = _replay(svc.submit, schedule, pool)
+            out = _guarded_replay(svc.submit, schedule, pool,
+                                  "serving_load dynamic replay")
             out["rows_per_batch"] = round(svc.stats["rows_per_batch"], 2)
         finally:
             svc.close()
@@ -146,7 +161,8 @@ def _run_mode(mode: str, packed, pool, schedule) -> dict:
     pred.warmup(tuple(1 << k for k in range(pred.max_batch.bit_length())))
     srv = _PerRequestServer(pred)
     try:
-        return _replay(srv.submit, schedule, pool)
+        return _guarded_replay(srv.submit, schedule, pool,
+                               "serving_load per_request replay")
     finally:
         srv.close()
 

@@ -1,0 +1,14 @@
+"""Static-analysis pass + runtime compile-guard for this repo's shipped
+bug classes.
+
+``python -m repro.analysis.lint src/`` runs rules R001-R005 (shape-
+keyed jit, dtype discipline, Pallas contracts, lock discipline, trapped
+kwargs); ``repro.analysis.compile_guard.CompileGuard`` is the runtime
+recompile budget. See README "Static analysis & compile-guard".
+"""
+from repro.analysis.compile_guard import CompileBudgetExceeded, CompileGuard
+from repro.analysis.framework import (Finding, Project, Rule, RULES,
+                                      SourceFile, run_rules)
+
+__all__ = ["CompileBudgetExceeded", "CompileGuard", "Finding", "Project",
+           "Rule", "RULES", "SourceFile", "run_rules"]

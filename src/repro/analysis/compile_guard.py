@@ -1,0 +1,117 @@
+"""Runtime compile-guard: fail tests that recompile beyond budget.
+
+The static pass (R001) catches shape-keyed recompile LEAKS it can see
+in the source; this is the runtime backstop that catches the ones it
+cannot. ``CompileGuard`` snapshots XLA compile activity over a code
+region and raises once the number of fresh compilations exceeds the
+declared budget — so a serving test that should replay through two
+cached programs fails loudly the day someone's change starts minting a
+program per request width again (the PR 9 decode leak was exactly
+this: ~400 ms per new width, invisible to assertions on results).
+
+Mechanism: ``jax_log_compiles`` makes jax emit one WARNING-level
+"Compiling <name> ..." log record per actual XLA compilation (cache
+hits are silent). The guard attaches a recording handler to the jax
+loggers for the duration of the ``with`` block and counts those
+records — no private jit internals, stable across jax versions that
+keep the logging contract (verified on 0.4.37).
+
+    with CompileGuard(budget=2, note="decode replay"):
+        svc.submit(...)   # > 2 compiles inside -> CompileBudgetExceeded
+
+The pytest fixture (tests/conftest.py) exposes the class so suites can
+declare per-test budgets.
+"""
+from __future__ import annotations
+
+import logging
+import re
+from typing import Optional
+
+# one record per XLA compilation under jax_log_compiles
+_COMPILE_RE = re.compile(r"^(?:Compiling ([^\s]+)|Finished XLA compilation"
+                         r" of ([^\s]+))")
+# jax emits compile logs from these module loggers (0.4.x); attaching to
+# the "jax" parent would also work but pulls in unrelated records.
+_JAX_LOGGERS = ("jax._src.interpreters.pxla", "jax._src.dispatch")
+
+
+class CompileBudgetExceeded(AssertionError):
+    """More XLA compilations than the declared budget."""
+
+
+class _Recorder(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.names: list[str] = []
+        self._seen: set[str] = set()
+
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.match(record.getMessage())
+        if not m:
+            return
+        name = m.group(1) or m.group(2)
+        # normalize: "Compiling <f>" vs "Finished XLA compilation of
+        # jit(<f>)" name the same program differently
+        name = re.sub(r"^jit\((.*)\)$", r"\1", name)
+        # "Compiling X" and "Finished XLA compilation of X" both fire
+        # for one compile on some versions; count each program once per
+        # occurrence of the *Compiling* form, falling back to the
+        # Finished form when only it is emitted.
+        if m.group(1) is not None:
+            self.names.append(name)
+            self._seen.add(name)
+        elif name not in self._seen:
+            self.names.append(name)
+
+
+class CompileGuard:
+    """Context manager bounding XLA compilations in its dynamic extent.
+
+    ``budget``: max number of fresh compilations allowed (cache hits
+    are free). ``note`` names the guarded region in the failure
+    message. The count (and the compiled-program names) stay readable
+    after exit via ``.count`` / ``.compiled`` for assertions on the
+    exact number.
+    """
+
+    def __init__(self, budget: int, note: str = ""):
+        if budget < 0:
+            raise ValueError(f"budget must be >= 0, got {budget}")
+        self.budget = budget
+        self.note = note
+        self._recorder: Optional[_Recorder] = None
+        self._prev_flag: Optional[bool] = None
+
+    @property
+    def count(self) -> int:
+        return len(self._recorder.names) if self._recorder else 0
+
+    @property
+    def compiled(self) -> list[str]:
+        return list(self._recorder.names) if self._recorder else []
+
+    def __enter__(self) -> "CompileGuard":
+        import jax
+        self._prev_flag = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        self._recorder = _Recorder()
+        for name in _JAX_LOGGERS:
+            logging.getLogger(name).addHandler(self._recorder)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        for name in _JAX_LOGGERS:
+            logging.getLogger(name).removeHandler(self._recorder)
+        import jax
+        jax.config.update("jax_log_compiles", self._prev_flag)
+        if exc_type is None and self.count > self.budget:
+            names = ", ".join(self.compiled)
+            raise CompileBudgetExceeded(
+                f"compile budget exceeded"
+                f"{f' ({self.note})' if self.note else ''}: "
+                f"{self.count} XLA compilations > budget {self.budget} "
+                f"[{names}] — a shape-keyed cache leak (see R001) or an "
+                f"undeclared new program; pad onto the pow2 ladder or "
+                f"raise the declared budget with justification")
+        return False

@@ -1,0 +1,167 @@
+"""R003 pallas-contracts: BlockSpec divisibility + static VMEM budget.
+
+Every Pallas kernel wrapper in this repo makes two promises its
+``pl.pallas_call`` cannot check for it:
+
+1. **Divisibility** — grid = shape // block silently truncates when the
+   shape is not a block multiple, dropping tail rows with no error. The
+   repo's contract is ``check_block_divisibility`` (kernels/rbf_gram.py),
+   which raises a ValueError naming the fix. A bare ``assert`` (or
+   nothing) in a wrapper that takes ``block_*`` tile parameters is the
+   bug class this rule flags — asserts vanish under ``python -O`` and
+   produce unreadable tuples when they do fire.
+
+2. **VMEM budget** — the TPU pipeline double-buffers every block, so
+   the static working set is ``2 * sum(block elements) * 4B`` and must
+   fit the ~16 MiB/core VMEM. This re-derives the feasibility filter
+   ``kernels.autotune`` applies to its candidate tile sweeps
+   (``2 * _vmem_bytes(...) <= VMEM_BUDGET_BYTES``), evaluated here on
+   the DECLARED BlockSpec shapes: int literals, ``block_*`` parameter
+   defaults, and module constants resolve exactly; runtime-shape dims
+   (feature widths etc.) fall back to 128 — the repo's MXU lane width
+   and the autotuner's own bucket floor.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.framework import (Finding, Project, Rule, SourceFile,
+                                      call_name, own_nodes, register,
+                                      walk_functions)
+
+_FALLBACK_DIM = 128        # MXU lane width; autotune's bucket floor
+_BYTES_PER_ELEM = 4        # budget at f32 accumulation width
+
+
+def _vmem_budget_bytes() -> int:
+    try:
+        from repro.kernels.autotune import VMEM_BUDGET_BYTES
+        return VMEM_BUDGET_BYTES
+    except Exception:  # lint must run without jax importable
+        return 16 * 2 ** 20
+
+
+def _module_int_constants(tree: ast.Module) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            try:
+                val = ast.literal_eval(node.value)
+            except (ValueError, SyntaxError):
+                continue
+            if isinstance(val, int) and not isinstance(val, bool):
+                out[node.targets[0].id] = val
+    return out
+
+
+def _param_defaults(fn) -> dict[str, int]:
+    out: dict[str, int] = {}
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    for param, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if isinstance(default, ast.Constant) and isinstance(default.value,
+                                                            int):
+            out[param.arg] = default.value
+    for param, default in zip(a.kwonlyargs, a.kw_defaults):
+        if (default is not None and isinstance(default, ast.Constant)
+                and isinstance(default.value, int)):
+            out[param.arg] = default.value
+    return out
+
+
+def _resolve_dim(node: ast.AST, defaults: dict[str, int],
+                 constants: dict[str, int]) -> int:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        if node.id in defaults:
+            return defaults[node.id]
+        if node.id in constants:
+            return constants[node.id]
+    return _FALLBACK_DIM
+
+
+def _block_shape_elems(shape_node: Optional[ast.AST],
+                       defaults: dict[str, int],
+                       constants: dict[str, int]) -> int:
+    """Element count of one declared block shape tuple; 0 if the node
+    is not a literal tuple (e.g. computed specs)."""
+    if not isinstance(shape_node, (ast.Tuple, ast.List)):
+        return 0
+    elems = 1
+    for dim in shape_node.elts:
+        elems *= _resolve_dim(dim, defaults, constants)
+    return elems
+
+
+def _iter_spec_calls(node: ast.AST, names: tuple[str, ...]):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and call_name(sub) in names:
+            yield sub
+
+
+@register
+class PallasContracts(Rule):
+    name = "R003"
+    summary = ("pallas_call wrapper missing check_block_divisibility for "
+               "its block_* tile params, or declared block shapes whose "
+               "double-buffered working set exceeds the VMEM budget")
+
+    def check(self, src: SourceFile, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        constants = _module_int_constants(src.tree)
+        budget = _vmem_budget_bytes()
+        for fn in walk_functions(src.tree):
+            calls = [n for n in own_nodes(fn) if isinstance(n, ast.Call)
+                     and call_name(n).endswith("pallas_call")]
+            if not calls:
+                continue
+            defaults = _param_defaults(fn)
+            from repro.analysis.framework import param_names
+            block_params = sorted(p for p in param_names(fn)
+                                  if p.startswith("block"))
+            has_check = any(
+                isinstance(n, ast.Call)
+                and call_name(n).endswith("check_block_divisibility")
+                for n in own_nodes(fn))
+            if block_params and not has_check:
+                out.append(Finding(
+                    rule=self.name, path=src.path, line=fn.lineno,
+                    col=fn.col_offset,
+                    message=(f"`{fn.name}` takes tile params "
+                             f"{block_params} but never calls "
+                             f"check_block_divisibility — grid = shape "
+                             f"// block silently drops the tail when a "
+                             f"shape is not a block multiple (bare "
+                             f"asserts do not count: they vanish under "
+                             f"-O)")))
+            for call in calls:
+                elems = 0
+                for kw in call.keywords:
+                    if kw.arg in ("in_specs", "out_specs"):
+                        for spec in _iter_spec_calls(kw.value,
+                                                     ("pl.BlockSpec",
+                                                      "BlockSpec")):
+                            arg = spec.args[0] if spec.args else None
+                            elems += _block_shape_elems(arg, defaults,
+                                                        constants)
+                    elif kw.arg == "scratch_shapes":
+                        for scr in _iter_spec_calls(kw.value,
+                                                    ("pltpu.VMEM",
+                                                     "VMEM")):
+                            arg = scr.args[0] if scr.args else None
+                            elems += _block_shape_elems(arg, defaults,
+                                                        constants)
+                working = 2 * elems * _BYTES_PER_ELEM
+                if working > budget:
+                    out.append(Finding(
+                        rule=self.name, path=src.path, line=call.lineno,
+                        col=call.col_offset,
+                        message=(f"declared block shapes in `{fn.name}` "
+                                 f"need {working} B double-buffered VMEM "
+                                 f"(> budget {budget} B) — shrink the "
+                                 f"default tiles; autotune.candidates "
+                                 f"would reject this configuration")))
+        return out

@@ -149,8 +149,10 @@ def _fit_many_svr(x, y, mask, a0=None, *, epsilon: float,
     def one(xt, yt, mt, b0=None):
         a02 = None
         if b0 is not None:
-            a02 = jnp.concatenate([jnp.maximum(b0, 0.0),
-                                   jnp.maximum(-b0, 0.0)])
+            # traced under the bucketed _fit_many jit: b0 has scheduler
+            # bucket width, not request width
+            a02 = jnp.concatenate([jnp.maximum(b0, 0.0),  # repro: noqa[R001] -- traced inside the bucketed _fit_many jit; shapes are bucket widths
+                                   jnp.maximum(-b0, 0.0)])  # repro: noqa[R001] -- traced inside the bucketed _fit_many jit; shapes are bucket widths
         r = smo_mod.svr_smo(xt, yt, mt, epsilon=epsilon, cfg=cfg,
                             kernel=kernel, engine=engine, alpha0=a02)
         return OvOFit(r.beta, r.b, r.n_iter, r.converged)
@@ -554,16 +556,16 @@ def sequential_ovo_fit(tasks: OvOTasks, *, solver: str = "gd",
     """
     c_total = tasks.x.shape[0] if n_real_tasks is None else n_real_tasks
     if solver == "gd":
-        solve = jax.jit(partial(gd_mod.binary_gd, cfg=gd_cfg,
+        solve = jax.jit(partial(gd_mod.binary_gd, cfg=gd_cfg,  # repro: noqa[R001] -- paper-baseline reproduction: jit built once per call, outside the task loop
                                 kernel=kernel, engine=engine))
     else:
-        solve = jax.jit(partial(smo_mod.binary_smo, cfg=smo_cfg,
+        solve = jax.jit(partial(smo_mod.binary_smo, cfg=smo_cfg,  # repro: noqa[R001] -- paper-baseline reproduction: jit built once per call, outside the task loop
                                 kernel=kernel, engine=engine))
     outs = []
     for t in range(c_total):
-        xt = jnp.asarray(tasks.x[t])
-        yt = jnp.asarray(tasks.y[t])
-        mt = jnp.asarray(tasks.mask[t])
+        xt = jnp.asarray(tasks.x[t])  # repro: noqa[R001] -- tasks pre-padded by build_tasks; every row has the same shape
+        yt = jnp.asarray(tasks.y[t])  # repro: noqa[R001] -- tasks pre-padded by build_tasks; every row has the same shape
+        mt = jnp.asarray(tasks.mask[t])  # repro: noqa[R001] -- tasks pre-padded by build_tasks; every row has the same shape
         r = solve(xt, yt, mt)
         if solver == "gd":
             outs.append(OvOFit(r.alpha, r.b, r.n_iter, jnp.asarray(True)))

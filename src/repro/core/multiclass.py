@@ -339,7 +339,7 @@ def build_schedule(sizes: Sequence[int],
             w = min(bucket_width(int(s), cfg), cap)
             by_width.setdefault(w, []).append(t)
 
-    loads = np.zeros(p, np.float64)
+    loads = np.zeros(p, np.float64)  # repro: noqa[R002] -- host-side LPT load accounting, never enters jit
     buckets = []
     for width in sorted(by_width, reverse=True):
         ids = sorted(by_width[width], key=lambda t: -sizes[t])

@@ -384,7 +384,7 @@ class SVC:
         if use_cascade:
             cascade_mod.validate_cascade(None, self.cascade_cfg)
             rounds = np.zeros(taskset.n_tasks, np.int64)
-            kkt = np.zeros(taskset.n_tasks, np.float64)
+            kkt = np.zeros(taskset.n_tasks, np.float64)  # repro: noqa[R002] -- host-side store of the f64 cascade certificate values
         n_tasks = taskset.n_tasks
         task_w = np.zeros((n_tasks, fmap.rank), np.float32)
         task_b = np.zeros((n_tasks,), np.float32)
@@ -438,7 +438,7 @@ class SVC:
         n_iter = np.zeros(c, np.int64)
         converged = np.zeros(c, bool)
         rounds = np.zeros(c, np.int64)
-        kkt = np.zeros(c, np.float64)
+        kkt = np.zeros(c, np.float64)  # repro: noqa[R002] -- host-side store of the f64 cascade certificate values
         for t, task in enumerate(taskset.tasks):
             r = cascade_mod.cascade_binary(
                 task.x, task.y, smo_cfg=self.smo_cfg,
@@ -747,8 +747,8 @@ class SVR:
 
     def score(self, xt: np.ndarray, yt: np.ndarray) -> float:
         """Coefficient of determination R^2 (sklearn convention)."""
-        yt = np.asarray(yt, np.float64)
-        resid = yt - np.asarray(self.predict(xt), np.float64)
+        yt = np.asarray(yt, np.float64)  # repro: noqa[R002] -- host-side R^2 accumulation, never enters jit
+        resid = yt - np.asarray(self.predict(xt), np.float64)  # repro: noqa[R002] -- host-side R^2 accumulation, never enters jit
         ss_res = float(np.sum(resid ** 2))
         ss_tot = float(np.sum((yt - yt.mean()) ** 2))
         if ss_tot == 0.0:

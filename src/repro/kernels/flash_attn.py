@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.rbf_gram import check_block_divisibility
+
 NEG_INF = -1e30
 
 
@@ -90,7 +92,8 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     bh, sq, d = q.shape
     sk = k.shape[1]
     dv = v.shape[2]
-    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    check_block_divisibility("flash_attention_pallas", sq=(sq, block_q),
+                             sk=(sk, block_k))
     grid = (bh, sq // block_q, sk // block_k)
     scale = d ** -0.5
     kernel = functools.partial(

@@ -49,8 +49,10 @@ def batch_specs(cfg: ModelConfig, shape: InputShape,
     return specs, shard
 
 
-def decode_token_specs(cfg: ModelConfig, shape: InputShape,
+def decode_token_specs(_cfg: ModelConfig, shape: InputShape,
                        mesh: Optional[Mesh]) -> tuple[Any, Any]:
+    # _cfg: kept for call-signature symmetry with input_specs; decode
+    # token shape is (batch,) regardless of architecture
     b = shape.global_batch
     dp = _dp_spec(mesh)
     tok = jax.ShapeDtypeStruct((b,), jnp.int32)

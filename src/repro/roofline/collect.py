@@ -88,8 +88,10 @@ def roofline_terms(*, flops: float, hbm_bytes: float,
             "t_total_est_s": max(t_compute, t_memory, t_coll)}
 
 
-def model_flops(param_count: int, active_param_count: int, tokens: int,
+def model_flops(_param_count: int, active_param_count: int, tokens: int,
                 *, kind: str) -> float:
+    # _param_count: total (vs active) params — informational for MoE
+    # callers; the 6ND/2ND rule charges only active params
     """6·N·D rule (training); 2·N·D for inference forward passes."""
     n = active_param_count
     mult = 6.0 if kind == "train" else 2.0

@@ -84,6 +84,10 @@ def _pow2_floor(n: int) -> int:
 class Predictor:
     """Serve a ``PackedModel``; see module docstring."""
 
+    # the served-row counter and program ledger are mutated by every
+    # concurrent decision_values caller (enforced by analysis rule R004)
+    _GUARDED_BY = {"n_requests": "_lock", "_program_sigs": "_lock"}
+
     def __init__(self, model: PackedModel, *,
                  engine: str | KE.EngineConfig = "auto",
                  max_batch: int = 1024):
@@ -157,7 +161,8 @@ class Predictor:
         batch bucket) signatures served so far. Owned by the predictor
         — it used to read the private ``jit._cache_size()``, which
         moved across jax versions and returned -1 when absent."""
-        return len(self._program_sigs)
+        with self._lock:
+            return len(self._program_sigs)
 
     def _batch_bucket(self, t: int) -> int:
         return min(self.max_batch, 1 << (max(t, 1) - 1).bit_length())
@@ -169,12 +174,15 @@ class Predictor:
         Warmup rows are synthetic and do NOT count toward
         ``n_requests`` (the served-row counter)."""
         d = self.model.n_features
-        served = self.n_requests
         for t in batch_sizes:
             # predict() runs decision_values + decode, warming both the
             # decide program and the vote/argmax ops at this bucket
             self.predict(np.zeros((int(t), d), np.float32))
-        self.n_requests = served
+        # subtract exactly the synthetic rows rather than restoring a
+        # pre-warmup snapshot: concurrent real requests served DURING
+        # warmup keep their counts (the snapshot restore erased them)
+        with self._lock:
+            self.n_requests -= sum(int(t) for t in batch_sizes)
         return self
 
     # ------------------------------------------------------------ serving

@@ -40,6 +40,12 @@ from repro.serve.predictor import Predictor
 class ModelRegistry:
     """Named packed models with LRU-bounded device residency."""
 
+    # everything mutable is coordinated by the one registry lock
+    # (enforced by analysis rule R004); readers go through the locked
+    # accessors / the `stats` snapshot property
+    _GUARDED_BY = {"_models": "_lock", "_resident": "_lock",
+                   "_stats": "_lock"}
+
     def __init__(self, *, max_resident: int = 4,
                  engine: Union[str, KE.EngineConfig] = "auto",
                  max_batch: int = 1024,
@@ -54,7 +60,7 @@ class ModelRegistry:
         self._models: dict[str, PackedModel] = {}          # host-side
         self._resident: OrderedDict[str, Predictor] = OrderedDict()
         self._lock = threading.RLock()
-        self.stats = {"hits": 0, "admissions": 0, "evictions": 0}
+        self._stats = {"hits": 0, "admissions": 0, "evictions": 0}
 
     # ------------------------------------------------------- registration
     def register(self, name: str, model, *, replace: bool = False) -> None:
@@ -88,17 +94,17 @@ class ModelRegistry:
             pred = self._resident.get(name)
             if pred is not None:
                 self._resident.move_to_end(name)
-                self.stats["hits"] += 1
+                self._stats["hits"] += 1
                 return pred
             while len(self._resident) >= self.max_resident:
                 self._resident.popitem(last=False)   # least recently used
-                self.stats["evictions"] += 1
+                self._stats["evictions"] += 1
             pred = Predictor(self._models[name], engine=self.engine,
                              max_batch=self.max_batch)
             if self.warmup_sizes:
                 pred.warmup(self.warmup_sizes)
             self._resident[name] = pred
-            self.stats["admissions"] += 1
+            self._stats["admissions"] += 1
             return pred
 
     def evict(self, name: str) -> bool:
@@ -115,6 +121,14 @@ class ModelRegistry:
             return self._models[name]
 
     # --------------------------------------------------------- inspection
+    @property
+    def stats(self) -> dict:
+        """Snapshot of the hit/admission/eviction counters. A copy:
+        callers used to read the live dict while `get` mutated it on
+        another thread (a torn read R004 now rejects)."""
+        with self._lock:
+            return dict(self._stats)
+
     @property
     def names(self) -> tuple:
         with self._lock:
@@ -135,11 +149,11 @@ class ModelRegistry:
             return len(self._models)
 
     # ----------------------------------------------------------- internal
-    def _require(self, name: str) -> None:
+    def _require(self, name: str) -> None:  # repro: holds[_lock]
         if name not in self._models:
             raise KeyError(f"model {name!r} is not registered "
                            f"(registered: {sorted(self._models)})")
 
-    def _drop_resident(self, name: str) -> bool:
+    def _drop_resident(self, name: str) -> bool:  # repro: holds[_lock]
         pred = self._resident.pop(name, None)
         return pred is not None

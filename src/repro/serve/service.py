@@ -64,6 +64,10 @@ class _Request(NamedTuple):
 class ServingService:
     """Dynamic-batching front end over one or many packed models."""
 
+    # shared mutable state and its lock (enforced by analysis rule R004):
+    # the worker thread mutates _stats; _closed coordinates submit/close
+    _GUARDED_BY = {"_stats": "_stats_lock", "_closed": "_stats_lock"}
+
     def __init__(self, models, *, window_ms: float = 2.0,
                  engine="auto", max_batch: int = 1024,
                  max_resident: int = 4, warmup_sizes: tuple = (1,)):
@@ -113,8 +117,9 @@ class ServingService:
         as a single row (and resolves to a length-1 result)."""
         if op not in _OPS:
             raise ValueError(f"unknown op {op!r}; expected one of {_OPS}")
-        if self._closed:
-            raise RuntimeError("service is closed")
+        with self._stats_lock:
+            if self._closed:
+                raise RuntimeError("service is closed")
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None]
@@ -147,8 +152,12 @@ class ServingService:
     def close(self, timeout: Optional[float] = None) -> None:
         """Stop accepting requests, flush everything queued, join the
         worker. Idempotent."""
-        if not self._closed:
+        with self._stats_lock:
+            first = not self._closed
             self._closed = True
+        if first:
+            # exactly one closer enqueues the sentinel — two racing
+            # close() calls used to both pass the unlocked check
             self._q.put(_SENTINEL)
         self._worker.join(timeout)
         # a submit that raced close() may have queued behind the

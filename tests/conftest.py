@@ -55,3 +55,22 @@ def mesh_devices():
     """The visible device list (jax initialized under the forced count)."""
     import jax
     return jax.devices()
+
+
+@pytest.fixture
+def compile_guard():
+    """The runtime recompile budget (repro.analysis.compile_guard).
+
+    Usage::
+
+        def test_replay(compile_guard):
+            with compile_guard(budget=2, note="decode replay"):
+                svc.predict(...)   # > 2 XLA compiles -> test fails
+
+    Returned as a factory so each test declares its own budget; the
+    guard raises ``CompileBudgetExceeded`` (an AssertionError) when the
+    guarded region compiles more programs than declared — the runtime
+    backstop for the shape-keyed leaks rule R001 cannot see statically.
+    """
+    from repro.analysis.compile_guard import CompileGuard
+    return CompileGuard

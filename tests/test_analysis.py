@@ -1,0 +1,413 @@
+"""Golden-fixture suite for the static-analysis pass + compile guard.
+
+Each rule gets one known-bad and one known-clean snippet, linted
+through the real CLI driver (``lint.main``) against a tmp tree — the
+same code path CI runs. Plus: suppression honored, unexplained
+suppressions reported (R000), the JSON schema pinned, exit codes, the
+baseline waiver path, and the runtime compile-guard demonstrably
+tripping when the pow2 padding ladder is bypassed.
+"""
+import json
+
+import pytest
+
+from repro.analysis import lint as lint_cli
+from repro.analysis.compile_guard import CompileBudgetExceeded, CompileGuard
+
+
+def run_lint(tmp_path, files, *args):
+    """Write {relpath: source} under tmp_path, lint it, return
+    (exit_code, parsed JSON report)."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    import io
+    from contextlib import redirect_stdout
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        code = lint_cli.main([str(tmp_path), "--format", "json", *args])
+    return code, json.loads(buf.getvalue())
+
+
+def rules_hit(report):
+    return {f["rule"] for f in report["findings"]}
+
+
+# ----------------------------------------------------------------- R001
+R001_BAD = """\
+import jax
+import jax.numpy as jnp
+
+def handle(request_rows):
+    f = jax.jit(lambda z: z + 1)
+    return jnp.sum(request_rows)
+"""
+
+R001_CLEAN = """\
+import jax.numpy as jnp
+
+def handle(request_rows):
+    bucket = 1 << (len(request_rows) - 1).bit_length()
+    padded = list(request_rows) + [0.0] * (bucket - len(request_rows))
+    return jnp.sum(jnp.asarray(padded))
+"""
+
+
+def test_r001_bad_serving_path(tmp_path):
+    code, report = run_lint(tmp_path, {"serve/handler.py": R001_BAD})
+    assert code == 1
+    assert rules_hit(report) == {"R001"}
+    msgs = " ".join(f["message"] for f in report["findings"])
+    assert "jax.jit" in msgs and "request_rows" in msgs
+
+
+def test_r001_clean_with_pow2_ladder(tmp_path):
+    code, report = run_lint(tmp_path, {"serve/handler.py": R001_CLEAN})
+    assert code == 0 and report["findings"] == []
+
+
+def test_r001_out_of_scope_path_not_flagged(tmp_path):
+    # same bad code OUTSIDE serve//dist.py is not a serving hot path
+    code, report = run_lint(tmp_path, {"training/handler.py": R001_BAD})
+    assert code == 0
+
+
+# ----------------------------------------------------------------- R002
+R002_BAD = """\
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+def loss(x):
+    return np.asarray(x, np.float64).sum()
+
+def gram_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = lax.dot_general(a_ref[...], b_ref[...],
+                                 (((1,), (1,)), ((), ())))
+"""
+
+R002_CLEAN = """\
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+def kkt_violation(f, alpha):
+    return np.asarray(f, np.float64).max() + alpha.sum()
+
+def gram_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = lax.dot_general(a_ref[...], b_ref[...],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+"""
+
+
+def test_r002_bad_f64_and_unpinned_matmul(tmp_path):
+    code, report = run_lint(tmp_path, {"core/thing.py": R002_BAD})
+    assert code == 1
+    assert rules_hit(report) == {"R002"}
+    msgs = [f["message"] for f in report["findings"]]
+    assert any("float64" in m for m in msgs)
+    assert any("preferred_element_type" in m for m in msgs)
+
+
+def test_r002_clean_certified_sites(tmp_path):
+    code, report = run_lint(tmp_path, {"core/thing.py": R002_CLEAN})
+    assert code == 0
+    # the cascade certificate module is allowlisted wholesale
+    code, _ = run_lint(tmp_path, {"core/cascade.py": (
+        "import numpy as np\n"
+        "def certify(f):\n"
+        "    return np.asarray(f, np.float64).max()\n")})
+    assert code == 0
+
+
+# ----------------------------------------------------------------- R003
+R003_BAD = """\
+import jax
+from jax.experimental import pallas as pl
+
+def tiled(x, block_n: int = 128):
+    n, = x.shape
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+    )(x)
+"""
+
+R003_VMEM_BAD = """\
+import jax
+from jax.experimental import pallas as pl
+from repro.kernels.rbf_gram import check_block_divisibility
+
+def tiled(x, block_n: int = 4096, block_m: int = 4096):
+    n, m = x.shape
+    check_block_divisibility("tiled", n=(n, block_n), m=(m, block_m))
+    return pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(n // block_n, m // block_m),
+        in_specs=[pl.BlockSpec((block_n, block_m), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+    )(x)
+"""
+
+R003_CLEAN = R003_BAD.replace(
+    "    n, = x.shape\n",
+    "    n, = x.shape\n"
+    "    check_block_divisibility('tiled', n=(n, block_n))\n").replace(
+    "from jax.experimental import pallas as pl",
+    "from jax.experimental import pallas as pl\n"
+    "from repro.kernels.rbf_gram import check_block_divisibility")
+
+
+def test_r003_missing_divisibility_check(tmp_path):
+    code, report = run_lint(tmp_path, {"kernels/k.py": R003_BAD})
+    assert code == 1
+    assert rules_hit(report) == {"R003"}
+    assert "check_block_divisibility" in report["findings"][0]["message"]
+
+
+def test_r003_vmem_budget_exceeded(tmp_path):
+    # 2 * 2 blocks * 4096^2 * 4B = 256 MiB >> the 16 MiB budget
+    code, report = run_lint(tmp_path, {"kernels/k.py": R003_VMEM_BAD})
+    assert code == 1
+    assert any("VMEM" in f["message"] for f in report["findings"])
+
+
+def test_r003_clean(tmp_path):
+    code, report = run_lint(tmp_path, {"kernels/k.py": R003_CLEAN})
+    assert code == 0, report["findings"]
+
+
+# ----------------------------------------------------------------- R004
+R004_BAD = """\
+import threading
+
+class Service:
+    _GUARDED_BY = {"_stats": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats = {"n": 0}
+
+    def submit(self):
+        self._stats["n"] += 1
+
+    def worker(self):
+        def loop():
+            return self._stats["n"]
+        return loop
+"""
+
+R004_CLEAN = """\
+import threading
+
+class Service:
+    _GUARDED_BY = {"_stats": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats = {"n": 0}
+
+    def submit(self):
+        with self._lock:
+            self._stats["n"] += 1
+
+    def _bump(self):  # repro: holds[_lock]
+        self._stats["n"] += 1
+"""
+
+
+def test_r004_unlocked_access_and_closure(tmp_path):
+    code, report = run_lint(tmp_path, {"serve/s.py": R004_BAD})
+    assert code == 1
+    assert rules_hit(report) == {"R004"}
+    # the nested worker closure does NOT inherit an enclosing with
+    assert any("worker.loop" in f["message"]
+               for f in report["findings"])
+
+
+def test_r004_with_block_and_holds_annotation(tmp_path):
+    code, report = run_lint(tmp_path, {"serve/s.py": R004_CLEAN})
+    assert code == 0, report["findings"]
+
+
+# ----------------------------------------------------------------- R005
+R005_BAD = """\
+class Solver:
+    def __init__(self, C=1.0, max_iter=100):
+        self.C = C
+        self.max_iter = max_iter
+
+    def fit(self):
+        return self.C
+"""
+
+R005_CLEAN = R005_BAD.replace("return self.C",
+                              "return self.C * self.max_iter")
+
+
+def test_r005_shelved_kwarg(tmp_path):
+    code, report = run_lint(tmp_path, {"core/s.py": R005_BAD})
+    assert code == 1
+    assert rules_hit(report) == {"R005"}
+    assert "max_iter" in report["findings"][0]["message"]
+
+
+def test_r005_consumed_cross_file(tmp_path):
+    # consumption in ANOTHER analyzed file counts (project-wide index)
+    code, _ = run_lint(tmp_path, {
+        "core/s.py": R005_BAD,
+        "core/user.py": "def run(s):\n    return s.max_iter\n"})
+    assert code == 0
+    code, _ = run_lint(tmp_path, {"core/s.py": R005_CLEAN})
+    assert code == 0
+
+
+def test_r005_unused_public_function_param(tmp_path):
+    code, report = run_lint(tmp_path, {"core/f.py": (
+        "def tune(budget, iters):\n    return budget\n")})
+    assert code == 1
+    assert "iters" in report["findings"][0]["message"]
+    # underscore prefix documents intentionally-unused
+    code, _ = run_lint(tmp_path, {"core/f.py": (
+        "def tune(budget, _iters):\n    return budget\n")})
+    assert code == 0
+
+
+# ----------------------------------------- suppressions / R000 / schema
+def test_noqa_with_reason_suppresses(tmp_path):
+    src = R005_BAD.replace(
+        "        self.max_iter = max_iter",
+        "        self.max_iter = max_iter  "
+        "# repro: noqa[R005] -- kept for pickle back-compat")
+    code, report = run_lint(tmp_path, {"core/s.py": src})
+    assert code == 0
+    assert report["counts"]["suppressed"] == 1
+    assert report["suppressed"][0]["reason"] == "kept for pickle back-compat"
+
+
+def test_unexplained_noqa_is_r000(tmp_path):
+    src = R005_BAD.replace(
+        "        self.max_iter = max_iter",
+        "        self.max_iter = max_iter  # repro: noqa[R005]")
+    code, report = run_lint(tmp_path, {"core/s.py": src})
+    assert code == 1
+    assert rules_hit(report) == {"R000"}
+    assert "unexplained" in report["findings"][0]["message"]
+
+
+def test_noqa_unknown_rule_is_r000(tmp_path):
+    code, report = run_lint(tmp_path, {"core/s.py": (
+        "X = 1  # repro: noqa[R999] -- no such rule\n")})
+    assert code == 1
+    assert rules_hit(report) == {"R000"}
+
+
+def test_json_schema_pinned(tmp_path):
+    code, report = run_lint(tmp_path, {"core/s.py": R005_BAD})
+    assert report["schema"] == 1
+    assert set(report) == {"schema", "findings", "suppressed",
+                           "baseline_waived", "counts"}
+    assert set(report["counts"]) == {"findings", "suppressed",
+                                     "baseline_waived", "files"}
+    f = report["findings"][0]
+    assert set(f) == {"rule", "path", "line", "col", "message"}
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    (tmp_path / "clean.py").write_text("x = 1\n")
+    assert lint_cli.main([str(tmp_path / "clean.py")]) == 0
+    assert lint_cli.main([str(tmp_path / "missing.py")]) == 2
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(:\n")  # unparseable -> cannot certify clean
+    assert lint_cli.main([str(bad)]) == 2
+    capsys.readouterr()
+
+
+def test_rules_subset_flag(tmp_path):
+    # R005-bad code linted with only R001 selected is clean
+    code, report = run_lint(tmp_path, {"core/s.py": R005_BAD},
+                            "--rules", "R001")
+    assert code == 0 and report["findings"] == []
+
+
+def test_baseline_waives_without_hiding(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"waive": [{"rule": "R005"}]}))
+    code, report = run_lint(tmp_path, {"core/s.py": R005_BAD},
+                            "--baseline", str(base))
+    assert code == 0
+    assert report["counts"]["findings"] == 0
+    assert report["counts"]["baseline_waived"] == 1
+    assert report["baseline_waived"][0]["rule"] == "R005"
+
+
+def test_shipped_tree_is_lint_clean():
+    """The acceptance gate: the shipped src/ exits 0 with the shipped
+    baseline, and every suppression in the tree carries a reason."""
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    import io
+    from contextlib import redirect_stdout
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        code = lint_cli.main([os.path.join(root, "src"), "--format",
+                              "json", "--baseline",
+                              os.path.join(root,
+                                           "analysis-baseline.json")])
+    report = json.loads(buf.getvalue())
+    assert code == 0, report["findings"]
+    assert all(s["reason"] for s in report["suppressed"])
+
+
+# ------------------------------------------------------- compile guard
+def test_compile_guard_counts_and_passes_within_budget():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: jnp.sum(x * 2.0))
+    # pow2 ladder: widths 5..8 all pad to bucket 8 -> one program.
+    # Inputs built OUTSIDE the guard (eager zeros compiles too).
+    xs = {w: jnp.zeros((1 << max(w - 1, 0).bit_length(),), jnp.float32)
+          for w in (5, 6, 7, 8)}
+    with CompileGuard(budget=1, note="padded widths") as g:
+        for w in (5, 6, 7, 8):
+            f(xs[w])
+    assert g.count == 1
+    assert "<lambda>" in g.compiled[0]
+    # cache hits after exit stay free (flag restored, handler removed)
+    f(jnp.zeros((8,), jnp.float32))
+
+
+def test_compile_guard_trips_when_pow2_ladder_bypassed():
+    """The PR 9 leak, reproduced: dispatching at RAW request widths
+    compiles one program per distinct width and blows the budget the
+    padded path satisfies."""
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: jnp.sum(x * 3.0))
+    with pytest.raises(CompileBudgetExceeded, match="compile budget"):
+        with CompileGuard(budget=2, note="raw widths"):
+            for w in (3, 5, 7, 9, 11):   # no padding: 5 distinct shapes
+                f(jnp.zeros((w,), jnp.float32))
+
+
+def test_compile_guard_budget_zero_rejects_any_compile():
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x + 1.0)
+    f(jnp.zeros((4,), jnp.float32))      # warm outside the guard
+    with CompileGuard(budget=0):
+        f(jnp.zeros((4,), jnp.float32))  # cache hit: fine
+    with pytest.raises(CompileBudgetExceeded):
+        with CompileGuard(budget=0):
+            f(jnp.zeros((16,), jnp.float32))  # fresh shape
+
+
+def test_compile_guard_validates_budget():
+    with pytest.raises(ValueError):
+        CompileGuard(budget=-1)

@@ -192,6 +192,21 @@ def test_cascade_refit_is_deterministic():
     assert a.cascade_kkt_ == b.cascade_kkt_
 
 
+def test_cascade_refit_within_compile_budget(compile_guard):
+    """An identical refit must replay entirely through the jit cache:
+    shard solves, merges and the certificate pass are shape-stable, so
+    a second fit over the same data compiles ZERO fresh XLA programs.
+    The runtime counterpart of analysis rule R001 for the training
+    path — a shape-keyed leak anywhere in the cascade (shard buckets,
+    KKT reduce, repair projection) trips this immediately."""
+    x, y = _binary_problem(n=120, seed=5)
+    kw = dict(kernel="rbf", gamma=0.5, shard="cascade", cascade_shards=2)
+    SVC(**kw).fit(x, y)                      # warm every program
+    with compile_guard(budget=0, note="identical cascade refit") as g:
+        SVC(**kw).fit(x, y)
+    assert g.count == 0
+
+
 # ----------------------------------------------------------------- serving
 def test_cascade_serving_state_packs_and_serves():
     """Cascade fits produce the standard compacted serving state, so the

@@ -1,0 +1,207 @@
+"""Every public config field observably changes behavior — or errors.
+
+The R005 rule catches a kwarg that never REACHES a config; this suite
+closes the other half of the max_iter bug class: a field that reaches
+the config but is then ignored by the solver. One parametrized case per
+public field of ``SMOConfig`` / ``DCDConfig`` / ``EngineConfig``: flip
+the field between two values and assert a solver-visible observable
+(alphas, iteration counts, engine class, program structure, values)
+differs — or that the invalid setting raises.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_engine as KE
+from repro.core import kernels as K
+from repro.core import linear, smo
+from repro.data import make_blobs, normalize
+
+
+def _blobs(n=24, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    y = np.where(np.arange(n) % 2 == 0, 1.0, -1.0).astype(np.float32)
+    x = (rng.normal(size=(n, d)) + 2.0 * y[:, None]).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+X, Y = _blobs()
+KP = K.KernelParams(name="rbf", gamma=0.5)
+
+
+def _smo(**overrides):
+    return smo.binary_smo(X, Y, cfg=smo.SMOConfig(**overrides), kernel=KP)
+
+
+def _smo_engine(cfg: smo.SMOConfig):
+    return smo._resolve_engine(X, KP, cfg, engine=None, gram=None,
+                               row_fn=None)
+
+
+# ------------------------------------------------------------ SMOConfig
+def _overlap_smo(**overrides):
+    """Overlapping blobs solved to a MID-RUN iteration cap: the final
+    convergence pass un-shrinks (n_active == n at convergence by
+    design), so shrinking is only observable when the cap fires while
+    the corridor freeze is in effect."""
+    x, y = make_blobs(150, 2, 10, sep=0.8, seed=3)
+    yy = np.where(y == 0, 1.0, -1.0).astype(np.float32)
+    x = normalize(x)
+    kp = K.resolve_gamma(K.KernelParams(), jnp.asarray(x))
+    return smo.binary_smo(jnp.asarray(x), jnp.asarray(yy), kernel=kp,
+                          engine="chunked",
+                          cfg=smo.SMOConfig(max_iter=320, **overrides))
+
+
+def _max_iter_case():
+    capped, free = _smo(max_iter=2), _smo(max_iter=100_000)
+    return (int(capped.n_iter) < int(free.n_iter)
+            and not bool(capped.converged) and bool(free.converged))
+
+
+SMO_FIELD_CASES = {
+    "C": lambda: not np.allclose(_smo(C=1.0).alpha, _smo(C=0.05).alpha),
+    "tol": lambda: int(_smo(tol=1e-6).n_iter) != int(_smo(tol=0.5).n_iter),
+    "max_iter": _max_iter_case,
+    # the cap quantizes to check_every device iterations per check
+    "check_every": lambda: (int(_smo(max_iter=2, check_every=1).n_iter)
+                            != int(_smo(max_iter=2, check_every=32).n_iter)),
+    "precompute_gram": lambda: (
+        type(_smo_engine(smo.SMOConfig(precompute_gram=True)))
+        is not type(_smo_engine(smo.SMOConfig(precompute_gram=False)))),
+    "use_pallas": lambda: isinstance(
+        _smo_engine(smo.SMOConfig(use_pallas=True, precompute_gram=False)),
+        KE.PallasKernelEngine),
+    "selection": lambda: (int(_smo(selection="first").n_iter)
+                          != int(_smo(selection="second").n_iter)),
+    "shrink_every": lambda: (int(_overlap_smo(shrink_every=1).n_active)
+                             < int(_overlap_smo(shrink_every=0).n_active)),
+    "shrink_slack": lambda: (
+        int(_overlap_smo(shrink_every=1, shrink_slack=0.0).n_active)
+        != int(_overlap_smo(shrink_every=1, shrink_slack=1000.0).n_active)),
+}
+
+
+@pytest.mark.parametrize("field", sorted(f.name for f in
+                                         dataclasses.fields(smo.SMOConfig)))
+def test_smo_config_field_observable(field):
+    assert field in SMO_FIELD_CASES, (
+        f"SMOConfig grew field {field!r}: add an observability case")
+    assert SMO_FIELD_CASES[field](), (
+        f"SMOConfig.{field} did not observably change solver behavior")
+
+
+# ------------------------------------------------------------ DCDConfig
+PHI = jnp.asarray(np.random.default_rng(1).normal(
+    size=(32, 4)).astype(np.float32))
+YL = jnp.asarray(np.where(np.arange(32) % 2 == 0, 1.0, -1.0)
+                 .astype(np.float32))
+
+
+def _dcd(**overrides):
+    return linear.linear_svc(PHI, YL, cfg=linear.DCDConfig(**overrides))
+
+
+DCD_FIELD_CASES = {
+    "C": lambda: not np.allclose(_dcd(C=1.0).alpha, _dcd(C=0.01).alpha),
+    "tol": lambda: int(_dcd(tol=1e-8).n_iter) != int(_dcd(tol=0.9).n_iter),
+    "max_epochs": lambda: (int(_dcd(max_epochs=1).n_iter)
+                           < int(_dcd(max_epochs=1000).n_iter)),
+    "bias": lambda: (float(_dcd(bias=0.0).b) == 0.0
+                     and float(_dcd(bias=1.0).b) != 0.0),
+}
+
+
+@pytest.mark.parametrize("field", sorted(f.name for f in
+                                         dataclasses.fields(linear.DCDConfig)))
+def test_dcd_config_field_observable(field):
+    assert field in DCD_FIELD_CASES, (
+        f"DCDConfig grew field {field!r}: add an observability case")
+    assert DCD_FIELD_CASES[field](), (
+        f"DCDConfig.{field} did not observably change solver behavior")
+
+
+# ---------------------------------------------------------- EngineConfig
+def _engine(**overrides):
+    return KE.make_engine(X, KP, KE.EngineConfig(**overrides))
+
+
+def _backend_case():
+    assert isinstance(_engine(backend="dense"), KE.DenseKernelEngine)
+    assert isinstance(_engine(backend="chunked"), KE.ChunkedKernelEngine)
+    with pytest.raises(ValueError):
+        _engine(backend="no-such-backend")
+    return True
+
+
+def _cache_slots_case():
+    eng0 = _engine(backend="chunked", cache_slots=0)
+    eng8 = _engine(backend="chunked", cache_slots=8)
+    return (eng0.init_cache() is None
+            and eng8.init_cache().rows.shape == (8, X.shape[0]))
+
+
+def _chunk_case():
+    # the streaming block size changes the compiled program structure
+    # of the training matvec (decide streams over TEST rows, which fit
+    # one block at either setting here)
+    j4 = str(jax.make_jaxpr(
+        lambda a: _engine(backend="chunked", chunk=4).matvec(a))(Y))
+    j16 = str(jax.make_jaxpr(
+        lambda a: _engine(backend="chunked", chunk=16).matvec(a))(Y))
+    return j4 != j16
+
+
+def _dense_limit_case():
+    n = X.shape[0]
+    small = _engine(backend="auto", dense_limit=n)
+    big = _engine(backend="auto", dense_limit=n - 1)
+    return (isinstance(small, KE.DenseKernelEngine)
+            and isinstance(big, KE.ChunkedKernelEngine)
+            and not isinstance(big, KE.PallasKernelEngine))
+
+
+def _shard_axis_case():
+    with pytest.raises(ValueError, match="shard_axis"):
+        _engine(backend="sharded")
+    return True
+
+
+def _gram_dtype_case():
+    g32 = np.asarray(_engine(backend="chunked", gram_dtype="fp32").full())
+    g16 = np.asarray(_engine(backend="chunked", gram_dtype="bf16").full())
+    return (not np.array_equal(g32, g16)) and np.allclose(g32, g16,
+                                                          atol=5e-2)
+
+
+ENGINE_FIELD_CASES = {
+    "backend": _backend_case,
+    "cache_slots": _cache_slots_case,
+    "chunk": _chunk_case,
+    "dense_limit": _dense_limit_case,
+    "shard_axis": _shard_axis_case,
+    "gram_dtype": _gram_dtype_case,
+    "rank": lambda: (_engine(backend="rff", rank=8).rank == 8
+                     and _engine(backend="rff", rank=16).rank == 16),
+    "landmarks": lambda: not np.allclose(
+        np.asarray(_engine(backend="nystrom", rank=8,
+                           landmarks="uniform").phi),
+        np.asarray(_engine(backend="nystrom", rank=8,
+                           landmarks="kmeans++").phi)),
+    "seed": lambda: not np.allclose(
+        np.asarray(_engine(backend="rff", rank=8, seed=0).phi),
+        np.asarray(_engine(backend="rff", rank=8, seed=1).phi)),
+}
+
+
+@pytest.mark.parametrize("field", sorted(f.name for f in
+                                         dataclasses.fields(KE.EngineConfig)))
+def test_engine_config_field_observable(field):
+    assert field in ENGINE_FIELD_CASES, (
+        f"EngineConfig grew field {field!r}: add an observability case")
+    assert ENGINE_FIELD_CASES[field](), (
+        f"EngineConfig.{field} did not observably change engine behavior")

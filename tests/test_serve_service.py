@@ -392,3 +392,147 @@ def test_predictor_decode_validates_op(binary_problem):
     df = pred.decision_values(np.zeros((2, 4), np.float32))
     with pytest.raises(ValueError, match="op"):
         pred.decode(df, "proba")
+
+
+# ----------------------------------------------- lock-discipline regressions
+# pinned after the R004 (lock-discipline) sweep: these are the races the
+# static rule flagged in serve/, fixed by putting the shared state under
+# the declared locks. Each test fails on the pre-fix code.
+def test_registry_stats_is_a_snapshot(binary_problem):
+    """`stats` used to be the live dict the admission path mutates on
+    other threads; it is now a copy taken under the registry lock."""
+    _, _, model = binary_problem
+    reg = serve.ModelRegistry(engine="chunked", warmup_sizes=())
+    reg.register("m", serve.pack(model))
+    reg.get("m")
+    s = reg.stats
+    s["admissions"] = 999                    # caller scribbles on copy
+    s["bogus"] = 1
+    assert reg.stats == {"hits": 0, "admissions": 1, "evictions": 0}
+    assert reg.stats is not reg.stats        # fresh snapshot per read
+
+
+def test_service_racing_closers_enqueue_one_sentinel(binary_problem):
+    """Two racing close() calls used to both pass the unlocked _closed
+    check and both enqueue the worker-stop sentinel; the first-closer
+    election now happens under the stats lock, so exactly one does."""
+    from repro.serve import service as service_mod
+    _, _, model = binary_problem
+    packed = serve.pack(model)
+    for _ in range(4):                       # give the race some chances
+        svc = serve.ServingService(packed, engine="chunked",
+                                   window_ms=0.0)
+        sentinels = []
+        orig_put = svc._q.put
+
+        def put(item, *a, _orig=orig_put, _log=sentinels, **k):
+            if item is service_mod._SENTINEL:
+                _log.append(item)
+            return _orig(item, *a, **k)
+
+        svc._q.put = put
+        barrier = threading.Barrier(6)
+
+        def closer():
+            barrier.wait(timeout=30)
+            svc.close()
+
+        threads = [threading.Thread(target=closer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert len(sentinels) == 1
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit(np.zeros((1, packed.n_features), np.float32))
+
+
+def test_service_submitters_racing_close_never_hang(binary_problem):
+    """Futures issued around a racing close() must all terminate: a real
+    result, a closed-service rejection at submit, or the fail-fast
+    'closed before dispatch' error — never a silent hang."""
+    x, _, model = binary_problem
+    svc = serve.ServingService(serve.pack(model), engine="chunked",
+                               window_ms=1.0)
+    svc.predict(x[:1])                       # warm the programs
+    futs: list = []
+    barrier = threading.Barrier(5)
+
+    def submitter(i):
+        barrier.wait(timeout=30)
+        for j in range(25):
+            try:
+                futs.append((svc.submit(x[(i + j) % len(x)]), i, j))
+            except RuntimeError:             # service closed: expected
+                return
+
+    def closer():
+        barrier.wait(timeout=30)
+        time.sleep(0.005)
+        svc.close()
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(4)] + [threading.Thread(target=closer)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads)
+    for fut, i, j in futs:
+        try:
+            got = fut.result(timeout=30)     # resolves one way or other
+            np.testing.assert_array_equal(
+                got, model.predict(x[(i + j) % len(x)][None]))
+        except RuntimeError as e:
+            assert "closed" in str(e)
+
+
+def test_warmup_concurrent_requests_keep_their_counts(binary_problem):
+    """warmup() used to snapshot-and-restore n_requests, erasing the
+    rows real callers served while warmup ran; it now subtracts exactly
+    its own synthetic rows under the lock."""
+    x, _, model = binary_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    pred.decision_values(x[:3])
+    assert pred.n_requests == 3
+    rows = [0]
+    stop = threading.Event()
+    started = threading.Event()
+
+    def real_traffic():
+        started.set()
+        while not stop.is_set():
+            pred.decision_values(x[:2])
+            rows[0] += 2
+
+    t = threading.Thread(target=real_traffic)
+    t.start()
+    try:
+        started.wait(timeout=30)
+        pred.warmup((1, 4, 16, 64))          # overlaps the live traffic
+    finally:
+        stop.set()
+        t.join(timeout=60)
+    assert pred.n_requests == 3 + rows[0]
+
+
+# ------------------------------------------------------------ compile guard
+def test_service_replay_stays_within_compile_budget(ovo_problem,
+                                                    compile_guard):
+    """Open-loop replay with mixed request sizes through the service
+    must reuse the warm bucketed programs: after warmup at the covering
+    buckets, a burst of odd-sized requests compiles NOTHING new."""
+    x, _, model = ovo_problem
+    packed = serve.pack(model)
+    with serve.ServingService(packed, engine="chunked",
+                              window_ms=2.0) as svc:
+        # warm every bucket the burst below can land in — merged
+        # windows reach ~120 rows, the 128 bucket — plus the decode path
+        for t in (1, 2, 4, 8, 16, 32, 64, len(x)):
+            svc.predict(x[:t])
+        with compile_guard(budget=0, note="mixed-size replay") as g:
+            futs = [svc.submit(x[i % 30:i % 30 + 1 + i % 5])
+                    for i in range(40)]
+            for f in futs:
+                f.result(timeout=60)
+        assert g.count == 0

@@ -271,6 +271,22 @@ def test_predictor_program_cache_is_batch_bucketed(ovo_problem):
     assert pred.n_programs == n0 + len(model._serving_buckets)
 
 
+def test_predictor_replay_within_compile_budget(ovo_problem,
+                                                compile_guard):
+    """Runtime backstop for the pow2 padding ladder (analysis R001):
+    after warmup at a bucket, every request size inside that bucket
+    replays through the warm programs — zero fresh XLA compiles. The
+    guard fails this test the day a change starts keying programs on
+    raw request shapes again."""
+    x, _, model = ovo_problem
+    pred = serve.Predictor(serve.pack(model), engine="chunked")
+    pred.warmup(batch_sizes=(32,))
+    with compile_guard(budget=0, note="warm-bucket replay") as g:
+        for nt in (17, 21, 25, 29, 32):
+            pred.predict(x[:nt])
+    assert g.count == 0 and pred.n_programs == len(model._serving_buckets)
+
+
 def test_max_batch_rounds_down_to_pow2(binary_problem):
     """An off-ladder max_batch must not mint off-ladder program shapes:
     max_batch=1000 used to pad 600-row requests to a 1000-row program
